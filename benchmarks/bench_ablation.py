@@ -1,0 +1,87 @@
+"""Paper Figs. 10 + 11 ablations.
+
+Fig. 10 (exclusion distance): D=0 vs D(Eq. 14) vs D_max -- QPS at matched ef
+plus recall and search-path TD fraction.  Claim mirrored: Eq. 14 beats both.
+
+Fig. 11 (termination threshold): pbar in {0, 0.25, 0.5, 0.75} -- recall/QPS
+tradeoff; claim mirrored: pbar = 0.5 keeps recall high without the slowdown
+of larger guards.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SearchConfig, compile_filter, favor_graph_search, stack_programs
+from repro.core import exclusion
+from repro.core import filters as F
+from . import common as C
+
+
+def _forced_D_search(fi, queries, prog, D_vec, k, ef, pbar=0.5, repeats=3):
+    import time
+    progs = {kk: jnp.asarray(v) for kk, v in stack_programs(
+        [prog] * len(queries)).items()}
+    cfg = SearchConfig(k=k, ef=ef, pbar_min=pbar)
+    qj = jnp.asarray(queries)
+    out = favor_graph_search(fi.g, qj, progs, jnp.asarray(D_vec), cfg)
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = favor_graph_search(fi.g, qj, progs, jnp.asarray(D_vec), cfg)
+        out["ids"].block_until_ready()
+        best = max(best, len(queries) / (time.perf_counter() - t0))
+    return out, best
+
+
+def run_exclusion(quick: bool = False):
+    fi = C.get_index()
+    vecs, attrs, schema, queries = C.get_dataset()
+    flt = F.Equality("i0", 4)  # Equality_int, p ~= 10% (paper's Fig. 10 setup)
+    prog = compile_filter(flt, schema)
+    mask = F.eval_program(prog, attrs.ints, attrs.floats)
+    p = float(mask.mean())
+    k, ef = 10, 96
+    truth = C.ground_truth(vecs, mask, queries, k)
+
+    d_eq14 = float(exclusion.exclusion_distance(p, ef, fi.delta_d))
+    d_max = float(np.mean([exclusion.d_max(q, vecs, mask) for q in queries[:16]]))
+    csv = C.Csv("ablation_exclusion.csv",
+                ["strategy", "D", "qps", "recall_at_10", "path_td_frac",
+                 "mean_hops"])
+    for name, d in [("D0", 0.0), ("D_eq14", d_eq14), ("D_max", d_max)]:
+        out, qps = _forced_D_search(fi, queries, prog,
+                                    np.full(len(queries), d, np.float32), k, ef)
+        rec = C.mean_recall(np.asarray(out["ids"]), truth, k)
+        hops = np.asarray(out["hops"])
+        frac = float(np.asarray(out["path_td"]).sum() / max(1, hops.sum()))
+        csv.add(name, d, qps, rec, frac, float(hops.mean()))
+    csv.write()
+    return csv.path
+
+
+def run_termination(quick: bool = False):
+    fi = C.get_index()
+    vecs, attrs, schema, queries = C.get_dataset()
+    flt = F.Equality("b0", True)  # Equality_bool (paper's Fig. 11 setup)
+    prog = compile_filter(flt, schema)
+    mask = F.eval_program(prog, attrs.ints, attrs.floats)
+    p = float(mask.mean())
+    k, ef = 10, 48
+    truth = C.ground_truth(vecs, mask, queries, k)
+    d = float(exclusion.exclusion_distance(p, ef, fi.delta_d))
+    csv = C.Csv("ablation_termination.csv",
+                ["pbar_min", "qps", "recall_at_10", "mean_hops"])
+    for pbar in [0.0, 0.25, 0.5, 0.75]:
+        out, qps = _forced_D_search(fi, queries, prog,
+                                    np.full(len(queries), d, np.float32),
+                                    k, ef, pbar=pbar)
+        rec = C.mean_recall(np.asarray(out["ids"]), truth, k)
+        csv.add(pbar, qps, rec, float(np.asarray(out["hops"]).mean()))
+    csv.write()
+    return csv.path
+
+
+if __name__ == "__main__":
+    run_exclusion()
+    run_termination()

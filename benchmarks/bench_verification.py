@@ -1,0 +1,108 @@
+"""Paper section 6.5 verification tests + Fig. 6 recall levels + Tabs. 4/5/6.
+
+ * Fig. 6   -- QPS at different recall levels (k in {1, 10, 50}).
+ * Tab. 4/5 -- construction time + storage vs a plain-HNSW (RSF) build.
+ * Fig. 12  -- TD proportion on search paths vs QPS correlation.
+ * Fig. 13  -- unfiltered (p=100%) search path length: FAVOR == vanilla HNSW.
+ * Tab. 6   -- linear model: R^2 of d_m ~ m over sampled anchors (> 0.8).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HnswParams, TrueFilter, build_hnsw, compile_filter
+from repro.core import filters as F
+from . import common as C
+
+
+def run_recall_levels(quick: bool = False):
+    fi = C.get_index()
+    vecs, attrs, schema, queries = C.get_dataset()
+    flt = F.Equality("b0", True)
+    prog = compile_filter(flt, schema)
+    mask = F.eval_program(prog, attrs.ints, attrs.floats)
+    csv = C.Csv("recall_levels.csv", ["k", "ef", "qps", "recall_at_k"])
+    for k in ([1, 10, 50] if not quick else [10]):
+        truth = C.ground_truth(vecs, mask, queries, k)
+        for ef in [max(16, 2 * k), max(48, 4 * k), max(96, 8 * k)]:
+            res, qps = C.timed_search(fi, queries, flt, k=k, ef=ef)
+            csv.add(k, ef, qps, C.mean_recall(res.ids, truth, k))
+    csv.write()
+    return csv.path
+
+
+def run_construction(quick: bool = False):
+    ns = [5000, C.N] if not quick else [5000]
+    csv = C.Csv("construction.csv",
+                ["n", "method", "build_s", "index_bytes", "delta_d"])
+    for n in ns:
+        vecs, attrs, schema, _ = C.get_dataset(n=n)
+        t0 = time.perf_counter()
+        idx = build_hnsw(vecs, HnswParams(M=12, efc=60, seed=1))
+        t_favor = time.perf_counter() - t0
+        # RSF/vanilla HNSW == same build minus the Delta_d recording; measure
+        # by rebuilding with alpha tracking disabled (alpha=efc -> no span)
+        t0 = time.perf_counter()
+        idx2 = build_hnsw(vecs, HnswParams(M=12, efc=60, seed=1, alpha=60))
+        t_plain = time.perf_counter() - t0
+        csv.add(n, "favor", t_favor, idx.storage_bytes() + attrs.ints.nbytes +
+                attrs.floats.nbytes, idx.delta_d)
+        csv.add(n, "hnsw_rsf", t_plain, idx2.storage_bytes(), 0.0)
+    csv.write()
+    return csv.path
+
+
+def run_search_path(quick: bool = False):
+    fi = C.get_index()
+    vecs, attrs, schema, queries = C.get_dataset()
+    csv = C.Csv("search_path.csv",
+                ["scenario", "method", "qps", "path_td_frac", "mean_hops"])
+    # Fig. 12: TD proportion vs QPS across selectivities
+    for p_name, flt in [("p50", F.Equality("b0", True)),
+                        ("p10", F.Equality("i0", 3)),
+                        ("p30", F.Inclusion("i0", [1, 4, 7]))]:
+        res, qps = C.timed_search(fi, queries, flt, k=10, ef=96, force="graph")
+        frac = float(res.path_td.sum() / max(1, res.hops.sum()))
+        csv.add(p_name, "favor", qps, frac, float(res.hops.mean()))
+    # Fig. 13: unfiltered p=100% -- FAVOR path length ~= vanilla HNSW
+    res_t, qps_t = C.timed_search(fi, queries, TrueFilter(), k=10, ef=96,
+                                  force="graph")
+    csv.add("p100", "favor", qps_t, 1.0, float(res_t.hops.mean()))
+    res_0, qps_0 = C.timed_search(fi, queries, TrueFilter(), k=10, ef=96,
+                                  force="graph", pbar_min=0.0)
+    csv.add("p100", "hnsw_equiv", qps_0, 1.0, float(res_0.hops.mean()))
+    csv.write()
+    ratio = res_t.hops.mean() / max(1.0, res_0.hops.mean())
+    print(f"# p=100%: FAVOR path length / vanilla = {ratio:.3f} (paper: ~1.0)")
+    return csv.path
+
+
+def run_linear_model(quick: bool = False):
+    vecs, attrs, schema, _ = C.get_dataset()
+    rng = np.random.default_rng(0)
+    anchors = rng.choice(len(vecs), 64 if not quick else 16, replace=False)
+    m_max = 1000
+    r2s = []
+    for a in anchors:
+        d = np.linalg.norm(vecs - vecs[a], axis=1)
+        dm = np.sort(d)[1:m_max + 1]
+        m = np.arange(1, len(dm) + 1)
+        coef = np.polyfit(m, dm, 1)
+        pred = np.polyval(coef, m)
+        ss_res = np.sum((dm - pred) ** 2)
+        ss_tot = np.sum((dm - dm.mean()) ** 2)
+        r2s.append(1.0 - ss_res / ss_tot)
+    csv = C.Csv("linear_model.csv", ["mean_r2", "std_r2", "n_anchors"])
+    csv.add(float(np.mean(r2s)), float(np.std(r2s)), len(anchors))
+    csv.write()
+    print(f"# paper Tab. 6 claim: R^2 > 0.8 -- measured {np.mean(r2s):.3f}")
+    return csv.path
+
+
+if __name__ == "__main__":
+    run_recall_levels()
+    run_construction()
+    run_search_path()
+    run_linear_model()

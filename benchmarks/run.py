@@ -1,0 +1,49 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only name]``
+
+Emits per-benchmark CSVs to bench_out/ and a ``name,us_per_call,derived``
+summary to stdout (derived = the benchmark's headline metric/CSV path).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_ablation, bench_qps_recall, bench_selectivity,
+                   bench_verification)
+
+    benches = [
+        ("qps_recall_figs4_5_8_9", bench_qps_recall.run),
+        ("selectivity_fig7", bench_selectivity.run),
+        ("exclusion_ablation_fig10", bench_ablation.run_exclusion),
+        ("termination_fig11", bench_ablation.run_termination),
+        ("recall_levels_fig6", bench_verification.run_recall_levels),
+        ("construction_tabs4_5", bench_verification.run_construction),
+        ("search_path_figs12_13", bench_verification.run_search_path),
+        ("linear_model_tab6", bench_verification.run_linear_model),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            out = fn(quick=args.quick)
+            dt = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{dt:.0f},{out}")
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{name},-1,FAILED:{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

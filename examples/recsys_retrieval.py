@@ -1,0 +1,73 @@
+"""FAVOR as the recsys retrieval layer (the retrieval_cand cell, reduced).
+
+Scores a user vector against a candidate item corpus under attribute filters
+(region/price/stock-style predicates), using:
+  1. the factorized dot-scoring path (jnp),
+  2. the FAVOR PreFBF Pallas kernel (fused filter + distance + top-k) via the
+     exact MIP->L2 augmentation reduction,
+  3. a FAVOR graph index over the item embeddings for sub-linear retrieval.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FavorIndex, HnswParams, compile_filter, paper_schema,
+                        stack_programs)
+from repro.core import filters as F
+from repro.core import random_attributes
+from repro.models.recsys import retrieval_topk_filtered
+
+
+def main():
+    n_items, d, k = 20000, 32, 50
+    rng = np.random.default_rng(0)
+    items = rng.normal(size=(n_items, d)).astype(np.float32)
+    schema = paper_schema()        # b0 = in_stock, i0 = category, f0 = price
+    attrs = random_attributes(schema, n_items, seed=1)
+    users = rng.normal(size=(4, d)).astype(np.float32)
+
+    flt = F.And(F.Equality("b0", True),          # in stock
+                F.Inclusion("i0", [2, 5, 7]),    # category in {2,5,7}
+                F.Range("f0", 10.0, 80.0))       # price band
+    progs = {kk: jnp.asarray(v) for kk, v in stack_programs(
+        [compile_filter(flt, schema)] * len(users)).items()}
+    ai, af = jnp.asarray(attrs.ints), jnp.asarray(attrs.floats)
+    it, uv = jnp.asarray(items), jnp.asarray(users)
+
+    t0 = time.perf_counter()
+    ids_j, sc_j = retrieval_topk_filtered(uv, it, progs, ai, af, k=k)
+    ids_j.block_until_ready()
+    print(f"jnp dot-scoring path:    {time.perf_counter()-t0:.3f}s "
+          f"(top score {float(sc_j[0, 0]):.3f})")
+
+    t0 = time.perf_counter()
+    ids_p, sc_p = retrieval_topk_filtered(uv, it, progs, ai, af, k=k,
+                                          use_pallas=True)
+    ids_p.block_until_ready()
+    print(f"Pallas filtered_topk:    {time.perf_counter()-t0:.3f}s "
+          f"(interpret mode on CPU; identical ids: "
+          f"{bool((ids_j == ids_p).all())})")
+
+    # graph path: L2 FAVOR index over L2-normalized items (cosine retrieval)
+    items_n = items / np.linalg.norm(items, axis=1, keepdims=True)
+    fi = FavorIndex.build(items_n, attrs, HnswParams(M=12, efc=60, seed=2))
+    users_n = users / np.linalg.norm(users, axis=1, keepdims=True)
+    # at p ~= 10% the result pool must reach ~k/p neighbors: ef >> 2k
+    res = fi.search(users_n, flt, k=k, ef=8 * k)
+    overlap = []
+    # cosine ground truth under the same filter
+    from repro.core import refimpl
+    mask = F.eval_program(compile_filter(flt, schema), attrs.ints, attrs.floats)
+    for i in range(len(users)):
+        truth, _ = refimpl.bruteforce_filtered(items_n, mask, users_n[i], k)
+        overlap.append(refimpl.recall_at_k(res.ids[i], truth, k))
+    print(f"FAVOR graph retrieval:   recall@{k}={np.mean(overlap):.3f} "
+          f"qps={res.qps:.1f} (p_hat={res.p_hat[0]:.3f}, "
+          f"route={'brute' if res.routed_brute[0] else 'graph'})")
+
+
+if __name__ == "__main__":
+    main()

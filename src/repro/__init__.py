@@ -1,0 +1,6 @@
+"""repro: FAVOR (filter-agnostic vector ANNS) as a production JAX framework.
+
+NOTE: this module must stay import-light (no jax import here) so that
+launch/dryrun.py can set XLA_FLAGS before jax initializes.
+"""
+__version__ = "1.0.0"

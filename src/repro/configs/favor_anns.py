@@ -1,0 +1,33 @@
+"""favor-anns: the paper's own system at production scale -- 64M vectors x
+128 dims sharded 16-way on "model", serve batch 4096 sharded on data/pod.
+Not one of the 40 assigned cells; lowered in the dry-run as the paper's
+serve_step (graph route, brute route, selectivity estimate)."""
+from dataclasses import dataclass
+
+from .base import ArchSpec, ShapeCell
+
+
+@dataclass(frozen=True)
+class FavorServeConfig:
+    name: str = "favor-anns"
+    n: int = 64_000_000
+    dim: int = 128
+    m_i: int = 2          # bool + int attribute columns
+    m_f: int = 1
+    k: int = 10
+    ef: int = 128
+    m0: int = 32
+    m: int = 16
+    n_upper: int = 3
+    width: int = 8
+    batch: int = 1024
+
+
+def spec() -> ArchSpec:
+    cfg = FavorServeConfig()
+    red = FavorServeConfig(name="favor-red", n=4096, dim=16, batch=16, ef=48)
+    cells = (
+        ShapeCell("serve_graph", "favor_serve", {"route": "graph"}),
+        ShapeCell("serve_brute", "favor_serve", {"route": "brute"}),
+    )
+    return ArchSpec("favor-anns", "favor", "this paper", cfg, red, cells)

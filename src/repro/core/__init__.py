@@ -1,0 +1,19 @@
+"""FAVOR core: the paper's contribution as a composable JAX library."""
+from . import exclusion, filters, prefbf, refimpl, selectivity, selector
+from .favor import FavorIndex, SearchResult
+from .filters import (And, AttributeTable, ColumnSpec, Equality, FalseFilter,
+                      Filter, Inclusion, Not, Or, Range, Schema, TrueFilter,
+                      compile_filter, paper_filters, paper_schema,
+                      random_attributes, stack_programs)
+from .hnsw import HnswIndex, HnswParams, build_hnsw
+from .search import SearchConfig, favor_graph_search, graph_arrays, rsf_graph_search
+
+__all__ = [
+    "And", "AttributeTable", "ColumnSpec", "Equality", "FalseFilter", "Filter",
+    "FavorIndex", "HnswIndex", "HnswParams", "Inclusion", "Not", "Or", "Range",
+    "Schema", "SearchConfig", "SearchResult", "TrueFilter", "build_hnsw",
+    "compile_filter", "exclusion", "favor_graph_search", "filters",
+    "graph_arrays", "paper_filters", "paper_schema", "prefbf",
+    "random_attributes", "refimpl", "rsf_graph_search", "selectivity",
+    "selector", "stack_programs",
+]

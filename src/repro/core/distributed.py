@@ -1,0 +1,249 @@
+"""Sharded FAVOR serving across the production mesh (DESIGN.md section 4).
+
+Layout (classic distributed-ANNS segment model, Milvus/Vearch style):
+ * the DB (vectors, attributes, per-shard HNSW subgraphs, selectivity sample)
+   is sharded on the ``model`` axis: shard s owns rows [s*Ns, (s+1)*Ns);
+ * the query batch is sharded on (``pod``, ``data``) -- pure data parallelism;
+ * every (data, model) mesh cell runs the single-shard search from search.py
+   on its query block x DB shard, then local top-k are ``all_gather``-ed along
+   ``model`` and sort-merged (k per shard -> k global; tiny collective);
+ * selectivity estimation psum-combines per-shard sample counts so every
+   shard computes the same p_hat and takes the same route deterministically.
+
+Each shard has its own HNSW (built independently offline -- embarrassingly
+parallel build, linear scaling in shards), its own entry point and its own
+Delta_d; D is computed per shard from the *global* p_hat and the local
+Delta_d, which matches the paper's global-statistic design per shard.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import exclusion
+from . import filters as F
+from . import prefbf, selectivity
+from .hnsw import HnswIndex, HnswParams, build_hnsw
+from .search import SearchConfig, favor_graph_search
+
+
+# ---------------------------------------------------------------------------
+# Sharded index container
+# ---------------------------------------------------------------------------
+@dataclass
+class ShardedFavorArrays:
+    """Global-shaped arrays; axis 0 of every DB array is sharded on "model".
+
+    vectors     (S*Ns, d)      norms      (S*Ns,)
+    neighbors0  (S*Ns, M0)     upper      (L_up, S*Ns, M)   [local node ids]
+    attrs_int   (S*Ns, m_i)    attrs_float(S*Ns, m_f)
+    entry       (S,) int32     delta_d    (S,) f32
+    sample_int  (S*ns, m_i)    sample_float (S*ns, m_f)
+    """
+    arrays: dict
+    n_shards: int
+    shard_rows: int
+    sample_rows: int  # per shard
+
+    def specs(self) -> dict:
+        sh = {
+            "vectors": P("model", None), "norms": P("model"),
+            "neighbors0": P("model", None), "upper": P(None, "model", None),
+            "attrs_int": P("model", None), "attrs_float": P("model", None),
+            "entry": P("model"), "delta_d": P("model"),
+            "sample_int": P("model", None), "sample_float": P("model", None),
+        }
+        return sh
+
+
+def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
+                  params: HnswParams | None = None, sample_rate: float = 0.01,
+                  seed: int = 0) -> ShardedFavorArrays:
+    """Partition rows round-robin-contiguously, build one HNSW per shard."""
+    n = vectors.shape[0]
+    assert n % n_shards == 0, "row count must divide the model axis"
+    ns = n // n_shards
+    parts = []
+    max_lup = 0
+    for s in range(n_shards):
+        sl = slice(s * ns, (s + 1) * ns)
+        p = params or HnswParams()
+        p = HnswParams(M=p.M, M0=p.M0, efc=p.efc, ml=p.ml, alpha=p.alpha,
+                       heuristic=p.heuristic, seed=p.seed + s)
+        idx = build_hnsw(vectors[sl], p)
+        parts.append((idx, sl))
+        max_lup = max(max_lup, len(idx.levels) - 1)
+
+    sample_n = max(8, int(round(ns * sample_rate)))
+    rng = np.random.default_rng(seed + 31)
+
+    neighbors0 = np.full((n, parts[0][0].params.M0), -1, np.int32)
+    upper = np.full((max_lup, n, parts[0][0].params.M), -1, np.int32)
+    entry = np.zeros((n_shards,), np.int32)
+    delta_d = np.zeros((n_shards,), np.float32)
+    s_int = np.zeros((n_shards * sample_n, attrs.ints.shape[1]), np.int32)
+    s_flt = np.zeros((n_shards * sample_n, attrs.floats.shape[1]), np.float32)
+    norms = np.einsum("nd,nd->n", vectors, vectors).astype(np.float32)
+
+    for s, (idx, sl) in enumerate(parts):
+        neighbors0[sl] = idx.levels[0]
+        for li, lv in enumerate(idx.levels[1:]):
+            upper[li, sl] = lv
+        entry[s] = idx.entry_point
+        delta_d[s] = idx.delta_d
+        samp = rng.choice(ns, size=sample_n, replace=sample_n > ns) + s * ns
+        s_int[s * sample_n:(s + 1) * sample_n] = attrs.ints[samp]
+        s_flt[s * sample_n:(s + 1) * sample_n] = attrs.floats[samp]
+
+    arrays = {
+        "vectors": vectors.astype(np.float32), "norms": norms,
+        "neighbors0": neighbors0, "upper": upper,
+        "attrs_int": attrs.ints, "attrs_float": attrs.floats,
+        "entry": entry, "delta_d": delta_d,
+        "sample_int": s_int, "sample_float": s_flt,
+    }
+    return ShardedFavorArrays(arrays, n_shards, ns, sample_n)
+
+
+def input_specs(n: int, dim: int, m_i: int, m_f: int, n_shards: int, *,
+                m0: int = 32, m: int = 16, n_upper: int = 3,
+                sample_rate: float = 0.01, width: int = 8,
+                batch: int = 4096, dtype=jnp.float32) -> dict:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    ns = n // n_shards
+    sample_n = max(8, int(round(ns * sample_rate)))
+    f32, i32 = dtype, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    return {
+        "db": {
+            "vectors": sds((n, dim), f32), "norms": sds((n,), f32),
+            "neighbors0": sds((n, m0), i32), "upper": sds((n_upper, n, m), i32),
+            "attrs_int": sds((n, m_i), i32), "attrs_float": sds((n, m_f), f32),
+            "entry": sds((n_shards,), i32), "delta_d": sds((n_shards,), jnp.float32),
+            "sample_int": sds((n_shards * sample_n, m_i), i32),
+            "sample_float": sds((n_shards * sample_n, m_f), f32),
+        },
+        "queries": sds((batch, dim), f32),
+        "programs": {
+            "valid": sds((batch, width), jnp.float32),
+            "imask": sds((batch, width, m_i), jnp.uint32),
+            "flo": sds((batch, width, m_f), f32),
+            "fhi": sds((batch, width, m_f), f32),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sharded serve steps
+# ---------------------------------------------------------------------------
+def _merge_topk(local_d, local_i, k: int, axis: str):
+    """all_gather local (B, k) results along ``axis`` and sort-merge."""
+    gd = jax.lax.all_gather(local_d, axis)          # (S, B, k)
+    gi = jax.lax.all_gather(local_i, axis)
+    s, b, _ = gd.shape
+    gd = jnp.moveaxis(gd, 0, 1).reshape(b, s * k)
+    gi = jnp.moveaxis(gi, 0, 1).reshape(b, s * k)
+    order = jnp.argsort(gd, axis=1)[:, :k]
+    return (jnp.take_along_axis(gd, order, axis=1),
+            jnp.take_along_axis(gi, order, axis=1))
+
+
+def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
+                   prefbf_chunk: int = 65536, query_axes=("data",),
+                   model_axis: str = "model"):
+    """Build the jitted sharded serve steps for ``mesh``.
+
+    Returns dict with:
+      estimate(db, programs)              -> (B,) p_hat (replicated)
+      serve_graph(db, queries, programs)  -> ids (B,k) GLOBAL row ids, dists
+      serve_brute(db, queries, programs)  -> ids (B,k), dists
+    """
+    qspec = P(query_axes if len(query_axes) > 1 else query_axes[0], None)
+    pspec_each = {"valid": P(qspec[0], None), "imask": P(qspec[0], None, None),
+                  "flo": P(qspec[0], None, None), "fhi": P(qspec[0], None, None)}
+    ef = ef_sel or cfg.ef
+
+    def db_specs():
+        return {
+            "vectors": P(model_axis, None), "norms": P(model_axis),
+            "neighbors0": P(model_axis, None),
+            "upper": P(None, model_axis, None),
+            "attrs_int": P(model_axis, None), "attrs_float": P(model_axis, None),
+            "entry": P(model_axis), "delta_d": P(model_axis),
+            "sample_int": P(model_axis, None), "sample_float": P(model_axis, None),
+        }
+
+    # -- selectivity estimate (psum-combined; identical on all shards) -------
+    def _estimate(db, programs):
+        mask = F.eval_program_batched(
+            programs, db["sample_int"], db["sample_float"], xp=jnp)  # (B, ns)
+        cnt = jnp.sum(mask.astype(jnp.float32), axis=1)
+        tot = jnp.asarray(mask.shape[1], jnp.float32)
+        cnt = jax.lax.psum(cnt, model_axis)
+        tot = jax.lax.psum(tot, model_axis)
+        return cnt / tot
+
+    estimate = jax.jit(shard_map(
+        _estimate, mesh=mesh,
+        in_specs=(db_specs(), pspec_each),
+        out_specs=P(qspec[0]),
+        check_rep=False))
+
+    # -- graph route ----------------------------------------------------------
+    def _serve_graph(db, queries, programs):
+        p_hat = _estimate(db, programs)
+        local_g = {
+            "vectors": db["vectors"], "norms": db["norms"],
+            "neighbors0": db["neighbors0"], "upper": db["upper"],
+            "entry": db["entry"][0],
+            "attrs_int": db["attrs_int"], "attrs_float": db["attrs_float"],
+        }
+        D = exclusion.exclusion_distance(p_hat, ef, db["delta_d"][0],
+                                         k=cfg.k, xp=jnp)
+        out = favor_graph_search(local_g, queries, programs, D, cfg)
+        shard = jax.lax.axis_index(model_axis).astype(jnp.int32)
+        n_local = db["vectors"].shape[0]
+        gids = jnp.where(out["ids"] >= 0, out["ids"] + shard * n_local, -1)
+        d, i = _merge_topk(out["dists"], gids, cfg.k, model_axis)
+        return jnp.where(jnp.isfinite(d), i, -1), d
+
+    serve_graph = jax.jit(shard_map(
+        _serve_graph, mesh=mesh,
+        in_specs=(db_specs(), qspec, pspec_each),
+        out_specs=(qspec, qspec),
+        check_rep=False))
+
+    # -- brute route -----------------------------------------------------------
+    def _serve_brute(db, queries, programs):
+        n_local = db["vectors"].shape[0]
+        chunk = min(prefbf_chunk, n_local)
+        while n_local % chunk:  # largest divisor of the shard row count
+            chunk -= 1
+        ids, d = prefbf.prefbf_topk(
+            db["vectors"], db["norms"], db["attrs_int"], db["attrs_float"],
+            queries, programs, k=cfg.k, chunk=chunk)
+        shard = jax.lax.axis_index(model_axis).astype(jnp.int32)
+        gids = jnp.where(ids >= 0, ids + shard * n_local, -1)
+        d, i = _merge_topk(d, gids, cfg.k, model_axis)
+        return jnp.where(jnp.isfinite(d), i, -1), d
+
+    serve_brute = jax.jit(shard_map(
+        _serve_brute, mesh=mesh,
+        in_specs=(db_specs(), qspec, pspec_each),
+        out_specs=(qspec, qspec),
+        check_rep=False))
+
+    return {"estimate": estimate, "serve_graph": serve_graph,
+            "serve_brute": serve_brute, "db_specs": db_specs(),
+            "query_spec": qspec}
+
+
+def device_put_sharded_db(arrays: dict, mesh: Mesh, specs: dict) -> dict:
+    return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+            for k, v in arrays.items()}

@@ -1,0 +1,165 @@
+"""FavorIndex: the end-to-end FAVOR API (paper Figure 1 workflow).
+
+Offline:  build a conventional HNSW over the vectors, record Delta_d (Eq. 5),
+          draw the selectivity sample, attach the attribute table.
+Online :  compile each query's filter to a DNF program, estimate p_hat on the
+          sample (section 4.2), route by lambda (section 4.1), compute the
+          exclusion distance D(p_hat) (Eq. 14) and execute either the PreFBF
+          scan or the exclusion-distance graph search (section 5), returning
+          the k nearest target points.
+
+The two online paths are separate jitted programs (one compiled executable
+per route); the host-side engine partitions each batch by route -- mixing
+them in one program would force both computations on every query.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import exclusion
+from . import filters as F
+from . import prefbf, selectivity, selector
+from .hnsw import HnswIndex, HnswParams, build_hnsw
+from .search import SearchConfig, favor_graph_search, graph_arrays
+
+
+@dataclass
+class SearchResult:
+    ids: np.ndarray      # (B, k) int64, -1 padded
+    dists: np.ndarray    # (B, k) float32, +inf padded
+    p_hat: np.ndarray    # (B,)
+    routed_brute: np.ndarray  # (B,) bool
+    hops: np.ndarray     # (B,) graph hops (0 for brute-routed queries)
+    path_td: np.ndarray  # (B,)
+    elapsed_s: float = 0.0
+
+    @property
+    def qps(self) -> float:
+        return len(self.ids) / max(self.elapsed_s, 1e-12)
+
+
+class FavorIndex:
+    """Single-host FAVOR index (the sharded serve path lives in
+    distributed.py and reuses the same array layout per shard)."""
+
+    def __init__(self, index: HnswIndex, attrs: F.AttributeTable,
+                 sel_cfg: selector.SelectorConfig | None = None,
+                 prefbf_chunk: int = 8192):
+        self.index = index
+        self.attrs = attrs
+        self.sel_cfg = sel_cfg or selector.SelectorConfig()
+        self.schema = attrs.schema
+        self.g = graph_arrays(index, attrs)
+
+        samp = selectivity.sample_indices(
+            index.n, self.sel_cfg.sample_rate, self.sel_cfg.min_sample,
+            self.sel_cfg.max_sample, seed=index.params.seed + 17)
+        self.sample_idx = samp
+        self.sample_ints = jnp.asarray(attrs.ints[samp])
+        self.sample_floats = jnp.asarray(attrs.floats[samp])
+
+        self.prefbf_chunk = min(prefbf_chunk, max(256, index.n))
+        pv, pn, pi, pf = prefbf.pad_db(index.vectors,
+                                       index.norms.astype(np.float32),
+                                       attrs.ints, attrs.floats,
+                                       self.prefbf_chunk)
+        self._pf = (jnp.asarray(pv), jnp.asarray(pn), jnp.asarray(pi),
+                    jnp.asarray(pf))
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def build(vectors: np.ndarray, attrs: F.AttributeTable,
+              params: HnswParams | None = None, **kw) -> "FavorIndex":
+        t0 = time.perf_counter()
+        index = build_hnsw(vectors, params)
+        build_s = time.perf_counter() - t0
+        fi = FavorIndex(index, attrs, **kw)
+        fi.build_seconds = build_s
+        return fi
+
+    @property
+    def delta_d(self) -> float:
+        return self.index.delta_d
+
+    def compile_filters(self, filters, width: int = 8) -> dict:
+        if isinstance(filters, F.Filter):
+            filters = [filters]
+        progs = [F.compile_filter(f, self.schema, width) for f in filters]
+        return {k: jnp.asarray(v) for k, v in F.stack_programs(progs).items()}
+
+    # -- online search --------------------------------------------------------
+    def search(self, queries: np.ndarray, filters, k: int = 10, ef: int = 100,
+               *, pbar_min: float = 0.5, gamma: float = 1.0,
+               force: str | None = None, use_pallas: bool = False,
+               cand_cap: int = 0) -> SearchResult:
+        """force in {None, "graph", "brute"} pins the route (benchmarks)."""
+        queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
+        B = queries.shape[0]
+        if isinstance(filters, F.Filter):
+            filters = [filters] * B
+        assert len(filters) == B, "one filter per query"
+        programs = self.compile_filters(filters)
+
+        t0 = time.perf_counter()
+        p_hat = np.asarray(selector.estimate_batched(
+            programs, self.sample_ints, self.sample_floats))
+        if force == "brute":
+            brute = np.ones((B,), bool)
+        elif force == "graph":
+            brute = np.zeros((B,), bool)
+        else:
+            brute = selector.route(p_hat, self.sel_cfg.lam)
+
+        ids = np.full((B, k), -1, np.int64)
+        dists = np.full((B, k), np.inf, np.float32)
+        hops = np.zeros((B,), np.int64)
+        path_td = np.zeros((B,), np.int64)
+
+        gi = np.nonzero(~brute)[0]
+        bi = np.nonzero(brute)[0]
+        if len(gi):
+            cfg = SearchConfig(k=k, ef=ef, pbar_min=pbar_min, gamma=gamma,
+                               cand_cap=cand_cap, use_pallas=use_pallas)
+            progs_g = {kk: jnp.asarray(np.asarray(v)[gi]) for kk, v in programs.items()}
+            D = exclusion.exclusion_distance(
+                jnp.asarray(p_hat[gi]), ef, self.delta_d, k=k,
+                p_min=self.sel_cfg.p_min, xp=jnp)
+            out = favor_graph_search(self.g, queries[gi], progs_g, D, cfg)
+            ids[gi] = np.asarray(out["ids"])
+            dists[gi] = np.asarray(out["dists"])
+            hops[gi] = np.asarray(out["hops"])
+            path_td[gi] = np.asarray(out["path_td"])
+        if len(bi):
+            progs_b = {kk: jnp.asarray(np.asarray(v)[bi]) for kk, v in programs.items()}
+            bid, bd = prefbf.prefbf_topk(*self._pf, queries[bi], progs_b,
+                                         k=k, chunk=self.prefbf_chunk,
+                                         use_pallas=use_pallas)
+            ids[bi] = np.asarray(bid)
+            dists[bi] = np.asarray(bd)
+        jax.block_until_ready(dists)
+        elapsed = time.perf_counter() - t0
+        return SearchResult(ids, dists, p_hat, brute, hops, path_td, elapsed)
+
+    # -- persistence -----------------------------------------------------------
+    def save(self, path: str) -> None:
+        self.index.save(path + ".hnsw.npz")
+        np.savez_compressed(path + ".attrs.npz", ints=self.attrs.ints,
+                            floats=self.attrs.floats,
+                            kinds=np.array([c.kind for c in self.schema.columns]),
+                            names=np.array([c.name for c in self.schema.columns]),
+                            vocabs=np.array([c.vocab or 0 for c in self.schema.columns]))
+
+    @staticmethod
+    def load(path: str, **kw) -> "FavorIndex":
+        index = HnswIndex.load(path + ".hnsw.npz")
+        z = np.load(path + ".attrs.npz")
+        cols = tuple(
+            F.ColumnSpec(str(n), str(k), int(v) if str(k) == "int" else None)
+            for n, k, v in zip(z["names"], z["kinds"], z["vocabs"]))
+        attrs = F.AttributeTable(F.Schema(cols), z["ints"], z["floats"])
+        return FavorIndex(index, attrs, **kw)

@@ -1,0 +1,45 @@
+"""Selectivity-driven search selector (paper Section 4).
+
+Routes each query by its sampled selectivity estimate: ``p_hat < lambda``
+(= 1%, paper section 4.1) goes to the pre-filtering brute-force scan, the rest
+to the exclusion-distance graph search.  The middle band (1% < p < 3%) is
+deliberately biased toward the graph path -- its QPS response is flat there
+(< 8% variation, Fig. 7) so estimator error is cheap, whereas the brute-force
+path swings > 50%.
+
+The estimate itself is one vectorized filter-program evaluation over the
+fixed sample block (selectivity.py); under the sharded serve path each shard
+holds a slice of the sample and the counts are psum-combined so every shard
+takes the same routing decision deterministically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import filters as F
+
+
+@dataclass(frozen=True)
+class SelectorConfig:
+    lam: float = 0.01          # lambda threshold (section 4.1)
+    sample_rate: float = 0.01  # section 4.2: 1% sampling
+    min_sample: int = 256
+    max_sample: int = 65536
+    p_min: float = 1e-4        # clamp for D computation off-route
+
+
+@jax.jit
+def estimate_batched(programs, sample_ints, sample_floats):
+    """(B,) p_hat over the pre-drawn sample rows (jit; runs every batch)."""
+    mask = F.eval_program_batched(programs, sample_ints, sample_floats, xp=jnp)
+    return jnp.mean(mask.astype(jnp.float32), axis=1)
+
+
+def route(p_hat: np.ndarray, lam: float) -> np.ndarray:
+    """True -> PreFBF (brute force); False -> FAVOR graph search."""
+    return np.asarray(p_hat) < lam

@@ -1,0 +1,62 @@
+"""EmbeddingBag Pallas kernel: scalar-prefetch gather + bag reduce.
+
+JAX has no native ``nn.EmbeddingBag`` (kernel_taxonomy section RecSys); the
+recsys architectures implement it as gather + segment_sum.  This kernel fuses
+the two: bag indices are scalar-prefetched, each grid step DMAs one embedding
+row straight into VMEM and accumulates into the output bag row -- the table
+itself never materializes a (B*L, d) gathered intermediate in HBM.
+
+Grid (B, L): output block (1, d) at row b is revisited across the sequential
+l axis; initialized at l == 0, divided by the bag's valid count at l == L-1
+for mean mode.  Padding ids (< 0) clamp to row 0 in the index_map and are
+masked out of the accumulation via the prefetched scalar.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, row_ref, out_ref, *, mode: str, length: int):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = idx_ref[b, l] >= 0
+    out_ref[...] += jnp.where(valid, row_ref[...], 0.0)
+
+    if mode == "mean":
+        @pl.when(l == length - 1)
+        def _finish():
+            cnt = jnp.zeros((), jnp.float32)
+            for ll in range(length):
+                cnt += (idx_ref[b, ll] >= 0).astype(jnp.float32)
+            out_ref[...] = out_ref[...] / jnp.maximum(cnt, 1.0)
+
+
+def embedding_bag_pallas(bags, table, *, mode: str, interpret: bool):
+    """bags (B, L) int32 (-1 pad); table (V, d) f32 -> (B, d) f32."""
+    b, length = bags.shape
+    dim = table.shape[1]
+    kern = functools.partial(_kernel, mode=mode, length=length)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, length),
+        in_specs=[
+            pl.BlockSpec((1, dim), lambda bi, li, idx: (jnp.maximum(idx[bi, li], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda bi, li, idx: (bi, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, dim), jnp.float32),
+        interpret=interpret,
+    )(bags, table)

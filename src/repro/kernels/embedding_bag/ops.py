@@ -1,0 +1,22 @@
+"""Public jit'd wrapper for the embedding_bag kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import default_interpret
+from .kernel import embedding_bag_pallas
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(table, bags, *, mode: str = "sum",
+                  interpret: bool | None = None):
+    """EmbeddingBag(table (V, d), bags (B, L) int32 -1-padded) -> (B, d)."""
+    assert mode in ("sum", "mean")
+    if interpret is None:
+        interpret = default_interpret()
+    return embedding_bag_pallas(bags.astype(jnp.int32),
+                                table.astype(jnp.float32),
+                                mode=mode, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the embedding_bag kernel (gather + masked reduce)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(bags, table, *, mode: str = "sum"):
+    """bags (B, L) int32 with -1 padding; table (V, d) -> (B, d)."""
+    safe = jnp.maximum(bags, 0)
+    rows = table[safe]                        # (B, L, d)
+    valid = (bags >= 0)[..., None]
+    out = jnp.sum(jnp.where(valid, rows, 0.0), axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(bags >= 0, axis=1, keepdims=True), 1)
+        out = out / cnt
+    return out

@@ -1,0 +1,155 @@
+"""Fused filtered distance + top-k Pallas TPU kernel.
+
+One kernel invocation scans the whole DB shard for a tile of queries:
+
+  grid = (B/bq, N/bn); the n-axis is sequential ("arbitrary") so a running
+  per-query top-k lives in VMEM scratch across n-tiles; the q-axis is
+  parallel.
+
+Per (i, j) step, entirely in VMEM:
+  * load query tile (bq, d), DB tile (bn, d) + norms + attribute rows,
+  * distances via one MXU dot:  d2 = |v|^2 + |q|^2 - 2 q.v^T   (bq, bn)
+  * evaluate the DNF filter program (bitmask + interval tests, branch-free),
+  * PreFBF mode (exclude=False): failing rows -> +BIG (pre-filter semantics);
+    exclusion mode (exclude=True): failing rows get +D (Eq. 2),
+  * merge the tile into the running (bq, k) top-k scratch by k iterations of
+    masked row-min extraction (k is small: 10-100; sort-free, TPU-friendly).
+
+VMEM working set per step: bq*d + bn*d + bq*bn + bq*k floats; defaults
+(bq, bn, d) = (128, 512, <=1024) stay well under 16 MB.  MXU dims (bq, d, bn)
+are multiples of 128 after ops.py padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 3.0e38  # python literal: jnp scalars may not be captured by pallas kernels
+
+
+def _eval_program_tile(valid, imask, flo, fhi, ints, floats):
+    """DNF filter program over a DB tile.
+
+    valid (bq, W); imask (bq, W, mi) uint32; flo/fhi (bq, W, mf)
+    ints (bn, mi) int32; floats (bn, mf) f32      ->  (bq, bn) bool
+    """
+    ok = valid[:, :, None] > 0  # (bq, W, 1)
+    if imask.shape[-1]:
+        # (bq, W, 1, mi) >> (1, 1, bn, mi) -> bit test, all columns
+        shifted = imask[:, :, None, :] >> ints[None, None, :, :].astype(jnp.uint32)
+        ok = ok & ((shifted & 1) == 1).all(axis=-1)
+    if flo.shape[-1]:
+        af = floats[None, None, :, :]
+        fok = (af >= flo[:, :, None, :]) & (af <= fhi[:, :, None, :])
+        ok = ok & fok.all(axis=-1)
+    return ok.any(axis=1)  # (bq, bn)
+
+
+def _topk_merge(best_d, best_i, tile_d, tile_i, k: int):
+    """Merge (bq, bn) tile into running (bq, k) top-k by iterated masked min.
+
+    Scatter-free (TPU Pallas has no in-kernel scatter): each extraction uses a
+    one-hot select built from argmin, so everything is elementwise + reduces."""
+    d = jnp.concatenate([best_d, tile_d], axis=1)   # (bq, k+bn)
+    i = jnp.concatenate([best_i, tile_i], axis=1)
+    cols = jnp.arange(d.shape[1], dtype=jnp.int32)[None, :]
+    out_d = []
+    out_i = []
+    for _ in range(k):
+        j = jnp.argmin(d, axis=1)                    # (bq,)
+        sel = cols == j[:, None].astype(jnp.int32)   # one-hot (bq, k+bn)
+        out_d.append(jnp.min(d, axis=1))
+        out_i.append(jnp.sum(jnp.where(sel, i, 0), axis=1))
+        d = jnp.where(sel, BIG, d)
+    return jnp.stack(out_d, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _kernel(q_ref, v_ref, n_ref, ai_ref, af_ref, valid_ref, imask_ref,
+            flo_ref, fhi_ref, dvec_ref, od_ref, oi_ref, bd_ref, bi_ref,
+            *, k: int, bn: int, exclude: bool):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        bd_ref[...] = jnp.full_like(bd_ref, BIG)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    q = q_ref[...]                     # (bq, d)
+    v = v_ref[...]                     # (bn, d)
+    vn = n_ref[...]                    # (bn,)
+    qn = jnp.sum(q * q, axis=-1)       # (bq,)
+    dot = jax.lax.dot_general(q, v, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # MXU
+    d2 = vn[None, :] + qn[:, None] - 2.0 * dot
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))  # (bq, bn)
+
+    mask = _eval_program_tile(valid_ref[...], imask_ref[...], flo_ref[...],
+                              fhi_ref[...], ai_ref[...], af_ref[...])
+    if exclude:
+        dist = dist + jnp.where(mask, 0.0, dvec_ref[...][:, None])
+    else:
+        dist = jnp.where(mask, dist, BIG)
+    # padded DB rows carry +BIG norms -> dist overflows to BIG and never wins
+    dist = jnp.minimum(dist, BIG)
+
+    ids = (j * bn + jnp.arange(bn, dtype=jnp.int32))[None, :]
+    ids = jnp.broadcast_to(ids, dist.shape)
+
+    bd, bi = _topk_merge(bd_ref[...], bi_ref[...], dist, ids, k)
+    bd_ref[...] = bd
+    bi_ref[...] = bi
+    od_ref[...] = bd
+    oi_ref[...] = bi
+
+
+def filtered_topk_pallas(queries, vectors, norms, ints, floats, programs,
+                         dvec, *, k: int, block_q: int, block_n: int,
+                         exclude: bool, interpret: bool):
+    """Launch the kernel.  All shapes must already be padded to block
+    multiples (ops.py does this).  Returns (dists (B,k), ids (B,k))."""
+    b, dim = queries.shape
+    n = vectors.shape[0]
+    bq, bn = block_q, block_n
+    assert b % bq == 0 and n % bn == 0
+    w = programs["valid"].shape[1]
+    mi = ints.shape[1]
+    mf = floats.shape[1]
+    grid = (b // bq, n // bn)
+
+    kern = functools.partial(_kernel, k=k, bn=bn, exclude=exclude)
+    out_d, out_i = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, dim), lambda i, j: (i, 0)),        # queries
+            pl.BlockSpec((bn, dim), lambda i, j: (j, 0)),        # vectors
+            pl.BlockSpec((bn,), lambda i, j: (j,)),              # norms
+            pl.BlockSpec((bn, mi), lambda i, j: (j, 0)),         # attrs int
+            pl.BlockSpec((bn, mf), lambda i, j: (j, 0)),         # attrs float
+            pl.BlockSpec((bq, w), lambda i, j: (i, 0)),          # valid
+            pl.BlockSpec((bq, w, mi), lambda i, j: (i, 0, 0)),   # imask
+            pl.BlockSpec((bq, w, mf), lambda i, j: (i, 0, 0)),   # flo
+            pl.BlockSpec((bq, w, mf), lambda i, j: (i, 0, 0)),   # fhi
+            pl.BlockSpec((bq,), lambda i, j: (i,)),              # D per query
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            # running top-k state lives in VMEM across the sequential n-axis
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, vectors, norms, ints, floats, programs["valid"],
+      programs["imask"], programs["flo"], programs["fhi"], dvec)
+    return out_d, out_i

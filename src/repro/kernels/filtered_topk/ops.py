@@ -1,0 +1,67 @@
+"""Public jit'd wrapper for the filtered_topk kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import default_interpret
+from .kernel import BIG, filtered_topk_pallas
+
+
+def _pad_rows(x, n_to, fill):
+    pad = n_to - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0)
+
+
+@partial(jax.jit, static_argnames=("k", "block_q", "block_n", "exclude",
+                                   "interpret"))
+def filtered_topk(vectors, norms, ints, floats, queries, programs, *,
+                  k: int = 10, block_q: int = 128, block_n: int = 512,
+                  dvec=None, exclude: bool = False,
+                  interpret: bool | None = None):
+    """Fused filtered brute-force top-k over the DB (Pallas).
+
+    Returns (ids (B, k) int32 with -1 for missing, dists (B, k) f32 with +inf
+    for missing) -- same contract as core.prefbf.prefbf_topk.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, dim = queries.shape
+    n = vectors.shape[0]
+    bq = min(block_q, max(8, b))
+    bn = min(block_n, max(32, n))
+
+    # pad DB rows: BIG norms make padded rows unreachable
+    n_pad = ((n + bn - 1) // bn) * bn
+    vectors = _pad_rows(vectors, n_pad, 0)
+    norms = _pad_rows(norms, n_pad, BIG)
+    ints = _pad_rows(ints, n_pad, 0)
+    floats = _pad_rows(floats, n_pad, jnp.nan)
+
+    # pad query rows
+    b_pad = ((b + bq - 1) // bq) * bq
+    qpad = b_pad - b
+    queries_p = _pad_rows(queries, b_pad, 0)
+    programs_p = {
+        "valid": _pad_rows(programs["valid"], b_pad, 0),
+        "imask": _pad_rows(programs["imask"], b_pad, 0),
+        "flo": _pad_rows(programs["flo"], b_pad, jnp.inf),
+        "fhi": _pad_rows(programs["fhi"], b_pad, -jnp.inf),
+    }
+    if dvec is None:
+        dvec = jnp.zeros((b,), jnp.float32)
+    dvec_p = _pad_rows(dvec.astype(jnp.float32), b_pad, 0)
+
+    out_d, out_i = filtered_topk_pallas(
+        queries_p, vectors, norms, ints, floats, programs_p, dvec_p,
+        k=k, block_q=bq, block_n=bn, exclude=exclude, interpret=interpret)
+    out_d, out_i = out_d[:b], out_i[:b]
+    missing = out_d >= BIG
+    return (jnp.where(missing, -1, out_i),
+            jnp.where(missing, jnp.inf, out_d))

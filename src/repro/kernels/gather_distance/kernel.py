@@ -1,0 +1,106 @@
+"""Scalar-prefetch neighbor gather + distance + exclusion Pallas kernel.
+
+The graph-search expansion hot spot: given per-query neighbor-id rows
+(B, M) into the DB shard, produce the adjusted distances Dis_bar (Eq. 2)
+and the TD mask for each (query, neighbor) pair.
+
+TPU realization of pointer-chasing (DESIGN.md section 3): neighbor ids are a
+**scalar-prefetch** operand (SMEM), and every DB-side BlockSpec index_map
+dereferences them to pick the HBM row to DMA -- the paged-attention
+indirection idiom (vLLM block tables).  Unlike paged KV, graph neighbors are
+inherently scattered single rows, so the grid is (B, M) with (1, d) row
+blocks; Mosaic pipelines the row DMAs across grid steps.
+
+Padding ids (< 0) are clamped in the index_map (the DMA must target a real
+row) and masked to +BIG in the kernel body via the prefetched scalar.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 3.0e38
+
+
+def _eval_row(valid, imask, flo, fhi, ints, floats):
+    """Filter program of one query over one gathered row -> bool scalar.
+    valid (1, W); imask (1, W, mi); flo/fhi (1, W, mf); ints (1, mi);
+    floats (1, mf)."""
+    ok = valid[0, :] > 0  # (W,)
+    if imask.shape[-1]:
+        shifted = imask[0] >> ints[0][None, :].astype(jnp.uint32)  # (W, mi)
+        ok = ok & ((shifted & 1) == 1).all(axis=-1)
+    if flo.shape[-1]:
+        af = floats[0][None, :]
+        ok = ok & ((af >= flo[0]) & (af <= fhi[0])).all(axis=-1)
+    return ok.any()
+
+
+def _kernel(idx_ref, q_ref, v_ref, n_ref, ai_ref, af_ref, valid_ref,
+            imask_ref, flo_ref, fhi_ref, d_ref, od_ref, otd_ref):
+    b = pl.program_id(0)
+    m = pl.program_id(1)
+    raw = idx_ref[b, m]
+
+    q = q_ref[0]
+    v = v_ref[0]
+    d2 = n_ref[0] + jnp.sum(q * q) - 2.0 * jnp.sum(q * v)
+    dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+
+    td = _eval_row(valid_ref[...], imask_ref[...], flo_ref[...],
+                   fhi_ref[...], ai_ref[...], af_ref[...])
+    dbar = dist + jnp.where(td, 0.0, d_ref[0])
+
+    invalid = raw < 0
+    od_ref[0, 0] = jnp.where(invalid, BIG, dbar)
+    otd_ref[0, 0] = jnp.where(invalid, 0, td.astype(jnp.int32))
+
+
+def gather_distance_pallas(nbr_ids, queries, vectors, norms, ints, floats,
+                           programs, dvec, *, interpret: bool):
+    """nbr_ids (B, M) int32 (-1 pad); queries (B, d); DB arrays (N, ...).
+    Returns (dbar (B, M) f32 with BIG at padding, td (B, M) int32)."""
+    b, m = nbr_ids.shape
+    dim = queries.shape[1]
+    w = programs["valid"].shape[1]
+    mi = ints.shape[1]
+    mf = floats.shape[1]
+
+    def row(idx, bi, mi_):
+        return (jnp.maximum(idx[bi, mi_], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, m),
+        in_specs=[
+            pl.BlockSpec((1, dim), lambda bi, mi_, idx: (bi, 0)),           # q
+            pl.BlockSpec((1, dim), lambda bi, mi_, idx: row(idx, bi, mi_)),  # v[gather]
+            pl.BlockSpec((1,), lambda bi, mi_, idx: (jnp.maximum(idx[bi, mi_], 0),)),
+            pl.BlockSpec((1, mi), lambda bi, mi_, idx: row(idx, bi, mi_)),   # attrs int
+            pl.BlockSpec((1, mf), lambda bi, mi_, idx: row(idx, bi, mi_)),   # attrs float
+            pl.BlockSpec((1, w), lambda bi, mi_, idx: (bi, 0)),
+            pl.BlockSpec((1, w, mi), lambda bi, mi_, idx: (bi, 0, 0)),
+            pl.BlockSpec((1, w, mf), lambda bi, mi_, idx: (bi, 0, 0)),
+            pl.BlockSpec((1, w, mf), lambda bi, mi_, idx: (bi, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, mi_, idx: (bi,)),                  # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda bi, mi_, idx: (bi, mi_)),
+            pl.BlockSpec((1, 1), lambda bi, mi_, idx: (bi, mi_)),
+        ],
+    )
+    out_d, out_td = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), jnp.float32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+        ],
+        interpret=interpret,
+    )(nbr_ids, queries, vectors, norms, ints, floats, programs["valid"],
+      programs["imask"], programs["flo"], programs["fhi"], dvec)
+    return out_d, out_td

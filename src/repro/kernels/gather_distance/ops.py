@@ -1,0 +1,24 @@
+"""Public jit'd wrapper for the gather_distance kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import default_interpret
+from .kernel import BIG, gather_distance_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_distance(vectors, norms, ints, floats, queries, nbr_ids, programs,
+                    dvec, *, interpret: bool | None = None):
+    """Graph-expansion distance evaluation (Pallas).
+
+    Returns (dbar (B, M) f32 -- +inf at -1 padding, td (B, M) bool)."""
+    if interpret is None:
+        interpret = default_interpret()
+    out_d, out_td = gather_distance_pallas(
+        nbr_ids.astype(jnp.int32), queries, vectors, norms, ints, floats,
+        programs, dvec.astype(jnp.float32), interpret=interpret)
+    return (jnp.where(out_d >= BIG, jnp.inf, out_d), out_td.astype(bool))

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the gather_distance kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import filters as F
+
+BIG = 3.0e38
+
+
+def gather_distance_ref(nbr_ids, queries, vectors, norms, ints, floats,
+                        programs, dvec):
+    """Gather + distance + exclusion, same contract as the kernel."""
+    safe = jnp.maximum(nbr_ids, 0)
+    v = vectors[safe]                       # (B, M, d)
+    vn = norms[safe]                        # (B, M)
+    qn = jnp.sum(queries * queries, axis=-1)
+    dot = jnp.einsum("bd,bmd->bm", queries, v)
+    dist = jnp.sqrt(jnp.maximum(vn + qn[:, None] - 2.0 * dot, 0.0))
+    td = F.eval_program_gathered(programs, ints[safe], floats[safe], xp=jnp)
+    dbar = dist + jnp.where(td, 0.0, dvec[:, None])
+    invalid = nbr_ids < 0
+    return (jnp.where(invalid, BIG, dbar),
+            jnp.where(invalid, 0, td.astype(jnp.int32)))

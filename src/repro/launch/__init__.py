@@ -1,0 +1,2 @@
+# NOTE: deliberately empty -- launch/dryrun.py must set XLA_FLAGS before any
+# jax import, so this package must not import jax at import time.

@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_specs, get_spec
+from repro.launch import cells as C
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RA
+
+
+def _lower_compile(cell, mesh):
+    if cell.in_shardings is not None:
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings)
+    else:  # shard_map cells carry their own specs
+        jitted = cell.step_fn
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = jitted.lower(*cell.args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    return lowered, compiled, t_lower, time.perf_counter() - t0
+
+
+def _cost_of(compiled, n_dev):
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = RA.parse_collectives(text, n_dev)
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            coll.link_bytes, coll.counts, coll.by_op)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *, builder=None,
+             probe: bool = True, probe_builder=None) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record.
+
+    Full-depth compile (layers under scan) -> memory_analysis (exact buffer
+    sizing).  Cost terms come from the (2, 4)-depth unrolled probes
+    extrapolated to full depth (see cells.probe_depths) because HLO cost
+    analysis counts while bodies once.
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = len(mesh.devices.reshape(-1))
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    try:
+        cell = (builder or C.build_cell)(arch, shape, mesh)
+        lowered, compiled, rec["lower_s"], rec["compile_s"] = \
+            _lower_compile(cell, mesh)
+        rec["memory"] = RA.memory_analysis_dict(compiled)
+
+        depths = C.probe_depths(arch) if probe else None
+        if depths is not None:
+            axis, l1, l2, lf = depths
+            pb = probe_builder or C.build_probe_cell
+            t0 = time.perf_counter()
+            c1 = _cost_of(_lower_compile(
+                pb(arch, shape, mesh, l1), mesh)[1], n_dev)
+            c2 = _cost_of(_lower_compile(
+                pb(arch, shape, mesh, l2), mesh)[1], n_dev)
+            rec["probe_s"] = time.perf_counter() - t0
+            r = (lf - l1) / (l2 - l1)
+            flops = c1[0] + r * (c2[0] - c1[0])
+            byts = c1[1] + r * (c2[1] - c1[1])
+            link = c1[2] + r * (c2[2] - c1[2])
+            counts = {k: int(round(c1[3].get(k, 0) +
+                                   r * (c2[3].get(k, 0) - c1[3].get(k, 0))))
+                      for k in set(c1[3]) | set(c2[3])}
+            by_op = {k: c1[4].get(k, 0.0) + r * (c2[4].get(k, 0.0) -
+                                                 c1[4].get(k, 0.0))
+                     for k in set(c1[4]) | set(c2[4])}
+            rec["probe"] = {"axis": axis, "depths": [l1, l2], "full": lf,
+                            "probe_flops": [c1[0], c2[0]]}
+        else:
+            flops, byts, link, counts, by_op = _cost_of(compiled, n_dev)
+
+        roof = RA.Roofline(flops=flops, hbm_bytes=byts, coll_link_bytes=link,
+                           n_devices=n_dev,
+                           collectives={"counts": counts, "by_op": by_op},
+                           model_flops=cell.model_flops)
+        rec["roofline"] = roof.to_dict()
+        rec["note"] = cell.note
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--skip-favor", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    todo = []
+    for arch, spec in all_specs(include_favor=not args.skip_favor).items():
+        if args.arch and arch != args.arch:
+            continue
+        for cell in spec.cells:
+            if args.shape and cell.name != args.shape:
+                continue
+            todo.append((arch, cell.name, cell.skip))
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("ok")}
+
+    for arch, shape, skip in todo:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            if (arch, shape, mesh_name) in done:
+                print(f"[skip-done] {arch} x {shape} x {mesh_name}")
+                continue
+            if skip:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "ok": True, "skipped": skip}
+                print(f"[SKIP] {arch} x {shape}: {skip}")
+            else:
+                print(f"[run ] {arch} x {shape} x {mesh_name} ...", flush=True)
+                rec = run_cell(arch, shape, multi)
+                if rec["ok"]:
+                    r = rec["roofline"]
+                    print(f"   ok lower={rec['lower_s']:.1f}s "
+                          f"compile={rec['compile_s']:.1f}s "
+                          f"bottleneck={r['bottleneck']} "
+                          f"tc={r['t_compute_s']:.4f} tm={r['t_memory_s']:.4f} "
+                          f"tx={r['t_collective_s']:.4f} "
+                          f"roofline_frac={r['roofline_frac']:.3f}", flush=True)
+                else:
+                    print(f"   FAIL {rec['error']}", flush=True)
+            results = [r for r in results
+                       if (r["arch"], r["shape"], r["mesh"]) !=
+                       (arch, shape, mesh_name)]
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh definition (function, not module constant: importing this
+module must never touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for multi-device CPU tests (8 fake devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def batch_axes(batch: int, mesh) -> tuple:
+    """Greedy batch-dim sharding: use pod/data axes whose sizes divide B."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    rem = batch
+    for name in ("pod", "data"):
+        if name in sizes and rem % sizes[name] == 0:
+            out.append(name)
+            rem //= sizes[name]
+    return tuple(out)

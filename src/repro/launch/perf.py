@@ -1,0 +1,199 @@
+"""Perf hillclimbing variants (EXPERIMENTS.md section Perf).
+
+Each variant is a named builder that reshapes ONE lever of a target cell;
+``python -m repro.launch.perf`` (through dryrun-style lowering) measures the
+three roofline terms before/after and appends to perf_results.json.
+
+Variants:
+  lm:    chunked attention (attn_chunk), microbatch accumulation, remat off
+  gnn:   bf16 message collectives, label-pruned final layer
+  favor: selectivity-sample sizing, candidate-pool width
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_spec
+from ..models import gnn
+from ..models.transformer import lm_loss
+from ..training import optimizer as opt
+from ..training.step import make_train_step
+from . import cells as C
+
+
+# ---------------------------------------------------------------------------
+# LM variants
+# ---------------------------------------------------------------------------
+def lm_variant(arch: str, shape: str, *, attn_chunk: int = 0,
+               microbatches: int = 1, remat: bool | None = None,
+               capacity_factor: float = 0.0):
+    def _cfg(spec, extra):
+        cfg = dataclasses.replace(
+            spec.config, attn_chunk=attn_chunk,
+            **({"remat": remat} if remat is not None else {}), **extra)
+        if capacity_factor and cfg.moe:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=capacity_factor))
+        return cfg
+
+    def build(arch_, shape_, mesh):
+        spec = get_spec(arch_)
+        cfg = _cfg(spec, {})
+        spec2 = dataclasses.replace(spec, config=cfg)
+        cell = C.build_lm_cell(spec2, spec.cell(shape_), mesh)
+        if microbatches > 1 and spec.cell(shape_).kind == "train":
+            ocfg = opt.OptConfig(total_steps=10000)
+
+            def loss_fn(p, batch):
+                return lm_loss(p, cfg, batch["tokens"], batch["labels"], mesh)
+
+            cell.step_fn = make_train_step(loss_fn, ocfg,
+                                           microbatches=microbatches)
+            cell.note = (cell.note or "") + f" mb={microbatches}"
+        return cell
+
+    def probe_build(arch_, shape_, mesh, depth):
+        spec = get_spec(arch_)
+        cfg = _cfg(spec, {"n_layers": depth, "unroll_layers": True})
+        spec2 = dataclasses.replace(spec, config=cfg)
+        return C.build_lm_cell(spec2, spec.cell(shape_), mesh)
+
+    return build, probe_build
+
+
+# ---------------------------------------------------------------------------
+# GNN variants (gcn ogb_products: the collective-bound cell)
+# ---------------------------------------------------------------------------
+def gnn_variant(arch: str, shape: str, *, bf16_msgs: bool = False,
+                label_prune: float = 0.0, bf16_end2end: bool = False):
+    """bf16_msgs: cast hidden features to bf16 around segment_sum so the
+    edge-sharded psum all-reduces carry half the bytes.
+    label_prune: fraction of labeled nodes; the FINAL conv layer aggregates
+    only edges into labeled nodes (receptive-field pruning), shrinking the
+    last (and widest) all-reduce by ~1/fraction."""
+    def build(arch_, shape_, mesh):
+        spec = get_spec(arch_)
+        cell0 = C.build_gnn_cell(spec, spec.cell(shape_), mesh)
+        meta = spec.cell(shape_).meta
+        n_classes = C._GNN_CLASSES[shape_]
+        cfg = dataclasses.replace(spec.config, d_feat=meta["d_feat"],
+                                  n_classes=n_classes)
+        params_sds, opt_sds, batch_sds = cell0.args
+        param_sh, opt_sh, bsh = cell0.in_shardings
+        all_ax = tuple(mesh.axis_names)
+        n_dev = len(mesh.devices.reshape(-1))
+
+        n_labeled = 0
+        if label_prune > 0:
+            n = batch_sds["x"].shape[0]
+            e = batch_sds["edges"].shape[1]
+            n_labeled = max(1, int(n * label_prune))
+            e_last = -(-max(1, int(e * label_prune)) // n_dev) * n_dev
+            batch_sds = dict(batch_sds)
+            batch_sds["final_edges"] = jax.ShapeDtypeStruct((2, e_last), jnp.int32)
+            batch_sds["label_idx"] = jax.ShapeDtypeStruct((n_labeled,), jnp.int32)
+            bsh = dict(bsh)
+            bsh["final_edges"] = NamedSharding(mesh, P(None, all_ax))
+            bsh["label_idx"] = NamedSharding(mesh, P())
+
+        ocfg = opt.OptConfig(total_steps=1000)
+
+        def loss_fn(p, batch):
+            return gnn_loss_opt(p, cfg, batch, bf16_msgs=bf16_msgs,
+                                n_labeled=n_labeled, bf16_end2end=bf16_end2end)
+
+        cell0.step_fn = make_train_step(loss_fn, ocfg)
+        cell0.args = (params_sds, opt_sds, batch_sds)
+        cell0.in_shardings = (param_sh, opt_sh, bsh)
+        cell0.note = f"bf16_msgs={bf16_msgs} label_prune={label_prune}"
+        return cell0
+
+    return build, None
+
+
+def gnn_loss_opt(params, cfg, batch, *, bf16_msgs: bool, n_labeled: int,
+                 bf16_end2end: bool = False):
+    """GCN loss with optional bf16 message casting and final-layer pruning.
+    bf16_end2end keeps hidden features bf16 through relu/matmul so the
+    collective itself must carry bf16 (no convert between scatter and psum
+    for XLA to hoist)."""
+    x, edges, deg = batch["x"], batch["edges"], batch["deg"]
+    labels, mask = batch["labels"], batch["mask"]
+    n = x.shape[0]
+    cast = (lambda t: t.astype(jnp.bfloat16)) if bf16_msgs else (lambda t: t)
+    uncast = ((lambda t: t) if bf16_end2end else
+              ((lambda t: t.astype(jnp.float32)) if bf16_msgs else (lambda t: t)))
+    if bf16_end2end:
+        x = x.astype(jnp.bfloat16)
+
+    coeff, s, d = gnn._sym_coeff(edges, deg)
+    h = x
+    dims = cfg.dims()
+    for i, _ in enumerate(dims[:-1]):
+        h = h @ params[f"conv{i}"]["w"]
+        msg = cast(h[s] * coeff[:, None].astype(h.dtype))
+        h = uncast(jax.ops.segment_sum(msg, d, num_segments=n))
+        h = jax.nn.relu(h + params[f"conv{i}"]["b"])
+
+    i_last = len(dims) - 1
+    h = h @ params[f"conv{i_last}"]["w"]
+    if n_labeled:
+        fe = batch["final_edges"]
+        li = batch["label_idx"]
+        coeff_f, s_f, d_f = gnn._sym_coeff(fe, deg)
+        msg = cast(h[s_f] * coeff_f[:, None].astype(h.dtype))
+        # d_f indexes into the compact labeled-row space [0, n_labeled)
+        logits = uncast(jax.ops.segment_sum(msg, d_f, num_segments=n_labeled))
+        logits = logits + params[f"conv{i_last}"]["b"]
+        lbl = labels[li]
+        msk = mask[li]
+    else:
+        msg = cast(h[s] * coeff[:, None].astype(h.dtype))
+        logits = uncast(jax.ops.segment_sum(msg, d, num_segments=n))
+        logits = logits + params[f"conv{i_last}"]["b"]
+        lbl, msk = labels, mask
+
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(lbl, 0)[:, None], axis=-1)[:, 0]
+    w = msk.astype(jnp.float32)
+    loss = jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return loss, {"ce_loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# FAVOR variants
+# ---------------------------------------------------------------------------
+def favor_variant(arch: str, shape: str, *, sample_rate: float = 0.01,
+                  cand_cap: int = 0, batch: int = 0, n: int = 0):
+    def build(arch_, shape_, mesh):
+        from ..configs import favor_anns
+        spec = get_spec("favor-anns")
+        cfg = spec.config
+        if batch:
+            cfg = dataclasses.replace(cfg, batch=batch)
+        if n:
+            cfg = dataclasses.replace(cfg, n=n)
+        from ..core import distributed as dist
+        from ..core.search import SearchConfig
+        model = C._mesh_axis_size(mesh, "model")
+        qax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        specs = dist.input_specs(cfg.n, cfg.dim, cfg.m_i, cfg.m_f, model,
+                                 m0=cfg.m0, m=cfg.m, n_upper=cfg.n_upper,
+                                 width=cfg.width, batch=cfg.batch,
+                                 sample_rate=sample_rate)
+        scfg = SearchConfig(k=cfg.k, ef=cfg.ef, cand_cap=cand_cap)
+        fns = dist.make_serve_fns(mesh, scfg, query_axes=qax)
+        route = spec.cell(shape_).meta["route"]
+        fn = fns["serve_graph"] if route == "graph" else fns["serve_brute"]
+        mf = (cfg.batch * 4.0 * cfg.ef * cfg.m0 * 2.0 * cfg.dim
+              if route == "graph" else cfg.batch * cfg.n * 2.0 * cfg.dim)
+        return C.Cell("favor-anns", shape_, fn,
+                      (specs["db"], specs["queries"], specs["programs"]),
+                      None, mf,
+                      note=f"sample_rate={sample_rate} ccap={cand_cap} b={batch}")
+
+    return build, None

@@ -1,0 +1,174 @@
+"""GQA attention with RoPE, QKV-bias, logit softcap, sliding windows, and a
+KV-cache decode path.
+
+Layer-type selection (gemma2 local/global alternation) is arithmetic: each
+layer carries a scalar ``window`` (0 = global) consumed inside the scanned
+layer body, so one compiled program covers both layer kinds.
+
+Decode attends one query token against a (B, S_cache, kv, h) cache that is
+updated in place (dynamic_update_slice at ``pos``); softmax statistics are
+computed in f32.  Sharding: q/o head axes on "model"; for decode shapes whose
+kv-head count does not divide the model axis the cache is sharded on the
+*sequence* axis instead and GSPMD inserts the split-softmax reductions
+(flash-decoding split-K layout; see configs/*.py rules).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, softcap
+from .module import Ctx, fan_in_init, zeros_init
+
+NEG = -2.0e38
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    query_scale: float | None = None  # default 1/sqrt(head_dim)
+
+
+def init_attention(ctx: Ctx, cfg: AttnConfig):
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv, cfg.head_dim, cfg.d_model
+    ctx.param("wq", (d, h, hd), ("embed", "heads", "head_dim"), fan_in_init())
+    ctx.param("wk", (d, kv, hd), ("embed", "kv_heads", "head_dim"), fan_in_init())
+    ctx.param("wv", (d, kv, hd), ("embed", "kv_heads", "head_dim"), fan_in_init())
+    ctx.param("wo", (h, hd, d), ("heads", "head_dim", "embed"), fan_in_init())
+    if cfg.qkv_bias:
+        ctx.param("bq", (h, hd), ("heads", "head_dim"), zeros_init())
+        ctx.param("bk", (kv, hd), ("kv_heads", "head_dim"), zeros_init())
+        ctx.param("bv", (kv, hd), ("kv_heads", "head_dim"), zeros_init())
+
+
+def _qkv(params, x, cfg: AttnConfig, positions):
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores_mask(q_pos, k_pos, window):
+    """causal + optional sliding window; window is a traced scalar (0=off)."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    in_win = (q_pos[:, None] - k_pos[None, :]) < jnp.maximum(window, 1)
+    use_win = window > 0
+    return causal & (in_win | ~use_win)
+
+
+def attend(q, k, v, mask, cfg: AttnConfig):
+    """q (B,S,nq,h); k/v (B,T,kv,h); mask (S,T) or (B,S,T) bool."""
+    b, s, nq, hd = q.shape
+    kvh = k.shape[2]
+    group = nq // kvh
+    scale = cfg.query_scale or (hd ** -0.5)
+    qg = q.reshape(b, s, kvh, group, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * scale
+    logits = softcap(logits, cfg.attn_softcap)
+    while mask.ndim < logits.ndim:
+        mask = mask[None]
+    logits = jnp.where(mask, logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(b, s, nq, hd)
+
+
+def attend_chunked(q, k, v, window, cfg: AttnConfig, chunk: int,
+                   unroll: bool = False):
+    """Flash-style online-softmax attention over KV chunks (XLA formulation).
+
+    Never materializes the (S, S) score tensor: a scan over KV chunks carries
+    running (max, sum, acc) statistics, so peak intermediate is (..., chunk).
+    This is the beyond-paper memory-term optimization for the train/prefill
+    cells (EXPERIMENTS.md section Perf); the TPU-native version would be a
+    Pallas splash kernel -- the XLA scan already removes the O(S^2) HBM
+    traffic, which is what the roofline memory term charges."""
+    b, s, nq, hd = q.shape
+    kvh = k.shape[2]
+    group = nq // kvh
+    scale = cfg.query_scale or (hd ** -0.5)
+    qg = q.reshape(b, s, kvh, group, hd)
+    n_chunks = s // chunk
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd)
+    q_pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        k_pos = j * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        logits = jnp.einsum("bskgh,btkh->bkgst", qg, kj).astype(jnp.float32)
+        logits = softcap(logits * scale, cfg.attn_softcap)
+        mask = _scores_mask(q_pos, k_pos, window)
+        logits = jnp.where(mask[None, None, None], logits, NEG)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        # accumulate in f32 (flash-attention convention; also keeps the scan
+        # carry dtype stable when activations are bf16)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p.astype(q.dtype), vj).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, group, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, group, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, group, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks, dtype=jnp.int32)),
+        unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, nq, hd)
+    return out.astype(q.dtype)
+
+
+def attention_train(params, x, cfg: AttnConfig, window, positions=None,
+                    chunk: int = 0, unroll: bool = False):
+    """Full (pre-fill / training) self-attention.  window: traced scalar.
+    chunk > 0 routes through the flash-style chunked path."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = _qkv(params, x, cfg, positions)
+    if chunk and s % chunk == 0 and s > chunk:
+        out = attend_chunked(q, k, v, window, cfg, chunk, unroll)
+    else:
+        pos = jnp.arange(s, dtype=jnp.int32)
+        mask = _scores_mask(pos, pos, window)
+        out = attend(q, k, v, mask, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"]), (k, v)
+
+
+def attention_decode(params, x, cache_k, cache_v, pos, cfg: AttnConfig, window):
+    """One-token decode.  x (B,1,d); cache_k/v (B,S,kv,h); pos scalar int32.
+    Returns (out (B,1,d), new_cache_k, new_cache_v)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    s_cache = cache_k.shape[1]
+    k_pos = jnp.arange(s_cache, dtype=jnp.int32)
+    valid = k_pos <= pos
+    in_win = (pos - k_pos) < jnp.maximum(window, 1)
+    mask = (valid & (in_win | (window <= 0)))[None, :]      # (1, T)
+    out = attend(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"]), cache_k, cache_v

@@ -1,0 +1,99 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) via segment_sum message passing.
+
+JAX sparse is BCOO-only, so message passing is implemented the way the
+assignment prescribes: an edge-index (2, E) int32 array drives
+gather -> scale-by-sym-norm -> ``jax.ops.segment_sum`` scatter.  Edges are
+padded with (-1, -1) rows (weight 0) so every shape is static and the edge
+axis shards evenly across the mesh; degree normalization assumes self-loops
+were added by the data pipeline.
+
+Supports the four assigned shape cells: full-graph node classification
+(cora, ogb_products), sampled-subgraph minibatch training (the neighbor
+sampler in data/graphs.py produces padded static-shape subgraphs), and
+batched small graphs (molecule) via block-diagonal batching + graph readout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .module import Ctx, fan_in_init, zeros_init
+
+
+@dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    n_layers: int = 2
+    d_feat: int = 1433
+    d_hidden: int = 16
+    n_classes: int = 7
+    norm: str = "sym"          # symmetric normalization (paper)
+    readout: str = "node"      # "node" | "graph" (molecule cells)
+    dropout: float = 0.0       # (inference path ignores)
+
+    def dims(self):
+        dims = [self.d_feat] + [self.d_hidden] * (self.n_layers - 1) + [self.n_classes]
+        return list(zip(dims[:-1], dims[1:]))
+
+
+def init_gcn(ctx: Ctx, cfg: GCNConfig):
+    for i, (din, dout) in enumerate(cfg.dims()):
+        sc = ctx.scope(f"conv{i}")
+        sc.param("w", (din, dout), ("feat", "hidden"), fan_in_init())
+        sc.param("b", (dout,), ("hidden",), zeros_init())
+    if cfg.readout == "graph":
+        sc = ctx.scope("head")
+        sc.param("w", (cfg.n_classes, cfg.n_classes), ("hidden", "hidden"),
+                 fan_in_init())
+        sc.param("b", (cfg.n_classes,), ("hidden",), zeros_init())
+
+
+def _sym_coeff(edges, deg):
+    """1/sqrt(deg_src * deg_dst); padded edges (src = -1) get weight 0."""
+    src, dst = edges[0], edges[1]
+    ok = src >= 0
+    s = jnp.maximum(src, 0)
+    d = jnp.maximum(dst, 0)
+    c = jax.lax.rsqrt(jnp.maximum(deg[s] * deg[d], 1.0).astype(jnp.float32))
+    return jnp.where(ok, c, 0.0), s, d
+
+
+def gcn_forward(params, cfg: GCNConfig, x, edges, deg, graph_ids=None,
+                n_graphs: int = 0):
+    """x (N, F); edges (2, E) int32 with -1 padding; deg (N,) float
+    (in-degree + self-loop).  graph_ids (N,) for graph readout."""
+    n = x.shape[0]
+    coeff, s, d = _sym_coeff(edges, deg)
+    h = x
+    n_conv = len(cfg.dims())
+    for i in range(n_conv):
+        h = h @ params[f"conv{i}"]["w"]                     # (N, dout) first: cheaper gather
+        msg = h[s] * coeff[:, None]                          # (E, dout)
+        h = jax.ops.segment_sum(msg, d, num_segments=n)
+        h = h + params[f"conv{i}"]["b"]
+        if i < n_conv - 1:
+            h = jax.nn.relu(h)
+    if cfg.readout == "graph":
+        assert graph_ids is not None
+        pooled = jax.ops.segment_sum(h, jnp.maximum(graph_ids, 0),
+                                     num_segments=n_graphs)
+        cnt = jax.ops.segment_sum(jnp.ones((n, 1)), jnp.maximum(graph_ids, 0),
+                                  num_segments=n_graphs)
+        pooled = pooled / jnp.maximum(cnt, 1.0)              # mean pool
+        h = jax.nn.relu(pooled) @ params["head"]["w"] + params["head"]["b"]
+    return h
+
+
+def gcn_loss(params, cfg: GCNConfig, x, edges, deg, labels, mask,
+             graph_ids=None, n_graphs: int = 0):
+    """Masked softmax cross entropy (mask: which nodes/graphs are labeled)."""
+    logits = gcn_forward(params, cfg, x, edges, deg, graph_ids, n_graphs)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    lbl = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, lbl[:, None], axis=-1)[:, 0]
+    w = mask.astype(jnp.float32)
+    loss = jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    acc = jnp.sum((logits.argmax(-1) == labels) * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return loss, {"ce_loss": loss, "acc": acc}

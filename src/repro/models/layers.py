@@ -1,0 +1,75 @@
+"""Shared layers: norms, gated MLP, RoPE, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import Ctx, fan_in_init, normal_init, ones_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(ctx: Ctx, name: str, dim: int, kind: str):
+    sc = ctx.scope(name)
+    sc.param("scale", (dim,), ("embed",), ones_init())
+    if kind == "layernorm":
+        sc.param("bias", (dim,), ("embed",), zeros_init())
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6,
+               gemma_style: bool = False):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"]
+        if params.get("bias") is not None:
+            y = y + params["bias"]
+    else:  # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        scale = (1.0 + params["scale"]) if gemma_style else params["scale"]
+        y = y * scale
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(ctx: Ctx, name: str, d_model: int, d_ff: int):
+    sc = ctx.scope(name)
+    sc.param("gate", (d_model, d_ff), ("embed", "mlp"), fan_in_init())
+    sc.param("up", (d_model, d_ff), ("embed", "mlp"), fan_in_init())
+    sc.param("down", (d_ff, d_model), ("mlp", "embed"), fan_in_init())
+
+
+def apply_mlp(params, x):
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x (..., S, n, h); positions (..., S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap and cap > 0 else x

@@ -1,0 +1,193 @@
+"""Minimal functional module system with logical-axis sharding (no flax).
+
+Params are nested dicts of arrays.  ``Ctx`` collects, during init, a parallel
+tree of *logical axis names* per parameter; ``logical_to_sharding`` maps those
+through a rules table (MaxText-style) to ``NamedSharding``s on the production
+mesh.  Init functions are pure jax (traceable), so the dry-run can derive
+parameter ShapeDtypeStructs via ``jax.eval_shape`` without materializing
+multi-hundred-GB weights.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def normal_init(scale: float = 0.02):
+    def f(key, shape, dtype):
+        return (scale * jax.random.normal(key, shape)).astype(dtype)
+    return f
+
+
+def fan_in_init():
+    def f(key, shape, dtype):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / np.sqrt(max(1, fan_in))
+        return (scale * jax.random.normal(key, shape)).astype(dtype)
+    return f
+
+
+def zeros_init():
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init():
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init context
+# ---------------------------------------------------------------------------
+class Ctx:
+    """Parameter collection context.  ``ctx.param(name, shape, axes)`` creates
+    the array and records its logical axes at the same tree path."""
+
+    def __init__(self, key, params: dict | None = None, axes: dict | None = None,
+                 dtype=jnp.float32):
+        self._key = key
+        self._n = 0
+        self.params = params if params is not None else {}
+        self.axes = axes if axes is not None else {}
+        self.dtype = dtype
+
+    def _next_key(self):
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)
+
+    def param(self, name: str, shape: tuple, axes: tuple,
+              init: Callable | None = None, dtype=None):
+        assert len(shape) == len(axes), f"{name}: shape {shape} vs axes {axes}"
+        init = init or normal_init()
+        arr = init(self._next_key(), shape, dtype or self.dtype)
+        self.params[name] = arr
+        self.axes[name] = axes
+        return arr
+
+    def scope(self, name: str) -> "Ctx":
+        sub_p = self.params.setdefault(name, {})
+        sub_a = self.axes.setdefault(name, {})
+        child = Ctx(jax.random.fold_in(self._key, hash(name) % (2**31)),
+                    sub_p, sub_a, self.dtype)
+        return child
+
+
+def init_with_axes(init_fn, key, *args, dtype=jnp.float32, **kw):
+    """Run ``init_fn(ctx, *args)`` and return (params, axes)."""
+    ctx = Ctx(key, dtype=dtype)
+    init_fn(ctx, *args, **kw)
+    return ctx.params, ctx.axes
+
+
+# ---------------------------------------------------------------------------
+# Logical axis rules -> NamedSharding
+# ---------------------------------------------------------------------------
+# Default rules for the production mesh (DESIGN.md section 4):
+#   batch-like axes  -> data (+pod) parallelism
+#   big contraction / head / expert / vocab / table axes -> tensor ("model")
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "table": "model",   # recsys embedding rows
+    "feat": None,
+    "stats": None,
+    "hidden": None,
+}
+
+
+def spec_for_axes(axes: tuple, rules: dict) -> P:
+    parts = []
+    for a in axes:
+        r = rules.get(a, None) if a is not None else None
+        parts.append(r)
+    return P(*parts)
+
+
+def logical_to_sharding(axes_tree, mesh: Mesh, rules: dict | None = None):
+    """Map an axes tree to a NamedSharding pytree for the mesh."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    avail = set(mesh.axis_names)
+
+    def fix(spec_part):
+        if spec_part is None:
+            return None
+        if isinstance(spec_part, tuple):
+            kept = tuple(s for s in spec_part if s in avail)
+            return kept if kept else None
+        return spec_part if spec_part in avail else None
+
+    def one(axes):
+        spec = spec_for_axes(axes, rules)
+        return NamedSharding(mesh, P(*[fix(s) for s in spec]))
+
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def spec_tree(axes_tree, mesh: Mesh, rules: dict | None = None):
+    """Same as logical_to_sharding but returns PartitionSpecs (for shard_map
+    or in_shardings on lowered fns)."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    avail = set(mesh.axis_names)
+
+    def fix(spec_part):
+        if spec_part is None:
+            return None
+        if isinstance(spec_part, tuple):
+            kept = tuple(s for s in spec_part if s in avail)
+            return kept if kept else None
+        return spec_part if spec_part in avail else None
+
+    def one(axes):
+        spec = spec_for_axes(axes, rules)
+        return P(*[fix(s) for s in spec])
+
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def constrain(x, mesh: Mesh, *axes, rules: dict | None = None):
+    """with_sharding_constraint by logical axes (no-op off-mesh)."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    avail = set(mesh.axis_names) if mesh is not None else set()
+
+    def fix(spec_part):
+        if spec_part is None:
+            return None
+        if isinstance(spec_part, tuple):
+            kept = tuple(s for s in spec_part if s in avail)
+            return kept if kept else None
+        return spec_part if spec_part in avail else None
+
+    if mesh is None:
+        return x
+    spec = spec_for_axes(axes, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*[fix(s) for s in spec])))
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(np.prod(p.shape)) * p.dtype.itemsize
+               for p in jax.tree.leaves(params))

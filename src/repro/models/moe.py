@@ -1,0 +1,116 @@
+"""Mixture-of-Experts block: top-k routing + sort-based static-capacity
+dispatch + expert-parallel grouped matmul.
+
+Dispatch is the sort-based static-shape formulation (no (T, E, C) one-hot
+tensors): flatten (token, choice) pairs, argsort by expert id, compute each
+pair's position inside its expert group via an exclusive-cumsum of expert
+counts, drop pairs beyond the static capacity C = ceil(T*k/E * cf), scatter
+the survivors into (E, C) slots, run the per-expert SwiGLU as batched
+einsums over the expert axis (sharded on "model" = expert parallelism), and
+scatter-add the weighted outputs back to token order.
+
+Aux losses: standard load-balancing loss (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .module import Ctx, fan_in_init, normal_init
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    capacity_factor: float = 1.25
+    renormalize: bool = True
+    dense_residual: bool = False  # arctic-style parallel dense FFN
+    d_ff_dense: int = 0
+
+
+def init_moe(ctx: Ctx, cfg: MoEConfig):
+    ctx.param("router", (cfg.d_model, cfg.n_experts), ("embed", "experts"),
+              normal_init(0.02))
+    ctx.param("wi_gate", (cfg.n_experts, cfg.d_model, cfg.d_ff),
+              ("experts", "embed", "expert_mlp"), fan_in_init())
+    ctx.param("wi_up", (cfg.n_experts, cfg.d_model, cfg.d_ff),
+              ("experts", "embed", "expert_mlp"), fan_in_init())
+    ctx.param("wo", (cfg.n_experts, cfg.d_ff, cfg.d_model),
+              ("experts", "expert_mlp", "embed"), fan_in_init())
+    if cfg.dense_residual:
+        dff = cfg.d_ff_dense or cfg.d_ff
+        ctx.param("dense_gate", (cfg.d_model, dff), ("embed", "mlp"), fan_in_init())
+        ctx.param("dense_up", (cfg.d_model, dff), ("embed", "mlp"), fan_in_init())
+        ctx.param("dense_down", (dff, cfg.d_model), ("mlp", "embed"), fan_in_init())
+
+
+def moe_capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def apply_moe(params, x, cfg: MoEConfig):
+    """x (..., T, d) flattened internally.  Returns (y, aux) where aux carries
+    the load-balance and z losses."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xf = x.reshape(-1, d)
+    t = xf.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    c = moe_capacity(t, cfg)
+
+    logits = (xf @ params["router"]).astype(jnp.float32)     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                   # (T, k)
+    if cfg.renormalize:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (Switch load balance + z-loss)
+    me = probs.mean(axis=0)                                  # (E,)
+    ce = jnp.zeros((e,)).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    flat_e = top_i.reshape(-1)                               # (T*k,)
+    flat_t = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    flat_p = top_p.reshape(-1).astype(x.dtype)
+    order = jnp.argsort(flat_e)                              # stable
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    keep = pos < c
+    slot = jnp.where(keep, se * c + pos, e * c)              # drop -> sentinel
+
+    disp_tok = jnp.zeros((e * c + 1,), jnp.int32).at[slot].set(st, mode="drop")[: e * c]
+    disp_p = jnp.zeros((e * c + 1,), x.dtype).at[slot].set(sp, mode="drop")[: e * c]
+    disp_ok = jnp.zeros((e * c + 1,), bool).at[slot].set(keep, mode="drop")[: e * c]
+
+    x_e = xf[disp_tok].reshape(e, c, d)
+    x_e = jnp.where(disp_ok.reshape(e, c, 1), x_e, 0)
+
+    # ---- expert SwiGLU (einsum over the expert axis -> EP on "model") -------
+    g = jnp.einsum("ecd,edf->ecf", x_e, params["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", x_e, params["wi_up"])
+    h = jax.nn.silu(g) * u
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["wo"])        # (E, C, d)
+
+    # ---- combine -------------------------------------------------------------
+    w = (disp_p * disp_ok).reshape(e * c, 1)
+    y = jnp.zeros_like(xf).at[disp_tok].add(y_e.reshape(e * c, d) * w)
+
+    if cfg.dense_residual:
+        dg = jax.nn.silu(xf @ params["dense_gate"]) * (xf @ params["dense_up"])
+        y = y + dg @ params["dense_down"]
+
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss,
+           "dropped_frac": 1.0 - keep.mean()}
+    return y.reshape(orig_shape), aux

@@ -1,0 +1,289 @@
+"""RecSys architectures: FM, Wide&Deep, DIEN (GRU + AUGRU), DLRM (dot).
+
+Embedding tables: JAX has no nn.EmbeddingBag / CSR -- lookups are gathers
+over stacked per-field tables (F, V, d) and bag reductions are
+``jax.ops.segment_sum`` (or the fused Pallas embedding_bag kernel).  Tables
+are *field-sharded* on the model axis (table-wise sharding, the DLRM
+production layout): each model rank owns F/16 whole tables; batch is data
+parallel.  Uniform per-field vocab keeps shapes static (noted in DESIGN.md).
+
+``retrieval_cand`` cells use the factorized dot-scoring form (two-tower /
+FM retrieval): a user vector against the item-embedding table, served by the
+FAVOR filtered_topk kernel -- the paper's technique as the retrieval layer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .module import Ctx, fan_in_init, normal_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+def init_tables(ctx: Ctx, name: str, n_fields: int, vocab: int, dim: int):
+    ctx.param(name, (n_fields, vocab, dim), ("fields", "table", "embed_dim"),
+              normal_init(0.01))
+
+
+def lookup(tables, ids):
+    """tables (F, V, d); ids (B, F) -> (B, F, d)."""
+    f = tables.shape[0]
+    return tables[jnp.arange(f)[None, :], ids]
+
+
+def init_mlp_stack(ctx: Ctx, name: str, dims: list[int]):
+    sc = ctx.scope(name)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        sc.param(f"w{i}", (a, b), ("feat", "mlp"), fan_in_init())
+        sc.param(f"b{i}", (b,), ("mlp",), zeros_init())
+
+
+def apply_mlp_stack(params, x, n: int, final_act: bool = False):
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logit, label):
+    logit = logit.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * label +
+                    jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# FM  (Rendle ICDM'10)  -- O(nk) sum-square trick
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    vocab: int = 1_000_000
+    embed_dim: int = 10
+
+
+def init_fm(ctx: Ctx, cfg: FMConfig):
+    ctx.param("w0", (1,), ("stats",), zeros_init())
+    ctx.param("w_lin", (cfg.n_sparse, cfg.vocab, 1), ("fields", "table", "embed_dim"),
+              normal_init(0.01))
+    init_tables(ctx, "v", cfg.n_sparse, cfg.vocab, cfg.embed_dim)
+
+
+def fm_forward(params, cfg: FMConfig, ids):
+    """ids (B, F) -> logit (B,).  Pairwise interactions via
+    0.5 * ((sum_f v_f)^2 - sum_f v_f^2) summed over the latent dim."""
+    lin = lookup(params["w_lin"], ids)[..., 0].sum(axis=1)        # (B,)
+    e = lookup(params["v"], ids)                                  # (B, F, k)
+    s = e.sum(axis=1)                                             # (B, k)
+    fm = 0.5 * (s * s - (e * e).sum(axis=1)).sum(axis=-1)         # (B,)
+    return params["w0"][0] + lin + fm
+
+
+def fm_loss(params, cfg: FMConfig, ids, labels):
+    logit = fm_forward(params, cfg, ids)
+    loss = bce_loss(logit, labels)
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep  (arXiv:1606.07792)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class WideDeepConfig:
+    name: str = "wide-deep"
+    n_sparse: int = 40
+    vocab: int = 1_000_000
+    embed_dim: int = 32
+    mlp: tuple = (1024, 512, 256)
+
+
+def init_wide_deep(ctx: Ctx, cfg: WideDeepConfig):
+    ctx.param("wide", (cfg.n_sparse, cfg.vocab, 1),
+              ("fields", "table", "embed_dim"), normal_init(0.01))
+    init_tables(ctx, "deep_emb", cfg.n_sparse, cfg.vocab, cfg.embed_dim)
+    dims = [cfg.n_sparse * cfg.embed_dim, *cfg.mlp, 1]
+    init_mlp_stack(ctx, "deep_mlp", dims)
+
+
+def wide_deep_forward(params, cfg: WideDeepConfig, ids):
+    wide = lookup(params["wide"], ids)[..., 0].sum(axis=1)
+    e = lookup(params["deep_emb"], ids).reshape(ids.shape[0], -1)
+    deep = apply_mlp_stack(params["deep_mlp"], e, len(cfg.mlp) + 1)[:, 0]
+    return wide + deep
+
+
+def wide_deep_loss(params, cfg: WideDeepConfig, ids, labels):
+    logit = wide_deep_forward(params, cfg, ids)
+    loss = bce_loss(logit, labels)
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------------
+# DIEN  (arXiv:1809.03672)  -- interest extraction GRU + AUGRU evolution
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    vocab: int = 1_000_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: tuple = (200, 80)
+    unroll: bool = False  # dry-run: unroll the GRU scans for HLO cost accuracy
+
+
+def _init_gru(ctx: Ctx, name: str, d_in: int, d_h: int):
+    sc = ctx.scope(name)
+    sc.param("wx", (d_in, 3 * d_h), ("feat", "hidden"), fan_in_init())
+    sc.param("wh", (d_h, 3 * d_h), ("hidden", "hidden"), fan_in_init())
+    sc.param("b", (3 * d_h,), ("hidden",), zeros_init())
+
+
+def _gru_cell(p, h, x, a=None):
+    """Standard GRU; if attention score ``a`` is given, AUGRU: z <- a*z."""
+    gx = x @ p["wx"] + p["b"]
+    gh = h @ p["wh"]
+    dh = h.shape[-1]
+    r = jax.nn.sigmoid(gx[..., :dh] + gh[..., :dh])
+    z = jax.nn.sigmoid(gx[..., dh:2 * dh] + gh[..., dh:2 * dh])
+    n = jnp.tanh(gx[..., 2 * dh:] + r * gh[..., 2 * dh:])
+    if a is not None:
+        z = a[..., None] * z
+    return (1.0 - z) * h + z * n
+
+
+def init_dien(ctx: Ctx, cfg: DIENConfig):
+    init_tables(ctx, "item_emb", 1, cfg.vocab, cfg.embed_dim)
+    _init_gru(ctx, "gru1", cfg.embed_dim, cfg.gru_dim)
+    _init_gru(ctx, "augru", cfg.gru_dim, cfg.gru_dim)
+    sc = ctx.scope("att")
+    sc.param("w", (cfg.gru_dim + cfg.embed_dim, 1), ("feat", "embed_dim"),
+             fan_in_init())
+    dims = [cfg.gru_dim + cfg.embed_dim, *cfg.mlp, 1]
+    init_mlp_stack(ctx, "head", dims)
+
+
+def dien_forward(params, cfg: DIENConfig, hist, target):
+    """hist (B, S) behavior ids (-1 pad); target (B,) item id -> logit (B,)."""
+    b, s = hist.shape
+    emb = params["item_emb"][0]                              # (V, d)
+    he = emb[jnp.maximum(hist, 0)] * (hist >= 0)[..., None]  # (B, S, d)
+    te = emb[target]                                         # (B, d)
+
+    p1 = params["gru1"]
+    def step1(h, x):
+        h = _gru_cell(p1, h, x)
+        return h, h
+    h0 = jnp.zeros((b, cfg.gru_dim), he.dtype)
+    _, states = jax.lax.scan(step1, h0, jnp.swapaxes(he, 0, 1),
+                             unroll=cfg.seq_len if cfg.unroll else 1)
+    states = jnp.swapaxes(states, 0, 1)                      # (B, S, gru)
+
+    # attention of each interest state on the target item
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(te[:, None, :], (b, s, cfg.embed_dim))], -1)
+    scores = (att_in @ params["att"]["w"])[..., 0]           # (B, S)
+    scores = jnp.where(hist >= 0, scores, -1e30)
+    a = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(he.dtype)
+
+    p2 = params["augru"]
+    def step2(h, xs):
+        x, at = xs
+        h = _gru_cell(p2, h, x, at)
+        return h, None
+    hT, _ = jax.lax.scan(step2, h0, (jnp.swapaxes(states, 0, 1),
+                                     jnp.swapaxes(a, 0, 1)),
+                         unroll=cfg.seq_len if cfg.unroll else 1)
+
+    z = jnp.concatenate([hT, te], axis=-1)
+    return apply_mlp_stack(params["head"], z, len(cfg.mlp) + 1)[:, 0]
+
+
+def dien_loss(params, cfg: DIENConfig, hist, target, labels):
+    logit = dien_forward(params, cfg, hist, target)
+    loss = bce_loss(logit, labels)
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------------
+# DLRM-RM2  (arXiv:1906.00091)  -- bottom MLP + dot interaction + top MLP
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    vocab: int = 1_000_000
+    embed_dim: int = 64
+    bot_mlp: tuple = (512, 256, 64)
+    top_mlp: tuple = (512, 512, 256)
+
+
+def init_dlrm(ctx: Ctx, cfg: DLRMConfig):
+    init_tables(ctx, "emb", cfg.n_sparse, cfg.vocab, cfg.embed_dim)
+    init_mlp_stack(ctx, "bot", [cfg.n_dense, *cfg.bot_mlp])
+    n_vec = cfg.n_sparse + 1
+    d_int = n_vec * (n_vec - 1) // 2 + cfg.embed_dim
+    init_mlp_stack(ctx, "top", [d_int, *cfg.top_mlp, 1])
+
+
+def dlrm_forward(params, cfg: DLRMConfig, dense, ids):
+    """dense (B, 13) f32; ids (B, 26) int32 -> logit (B,)."""
+    b = dense.shape[0]
+    x = apply_mlp_stack(params["bot"], dense, len(cfg.bot_mlp), final_act=True)
+    e = lookup(params["emb"], ids)                           # (B, 26, 64)
+    vecs = jnp.concatenate([x[:, None, :], e], axis=1)       # (B, 27, 64)
+    gram = jnp.einsum("bnd,bmd->bnm", vecs, vecs)            # (B, 27, 27)
+    n_vec = cfg.n_sparse + 1
+    iu, ju = jnp.triu_indices(n_vec, k=1)
+    inter = gram[:, iu, ju]                                  # (B, 351)
+    z = jnp.concatenate([x, inter], axis=-1)
+    return apply_mlp_stack(params["top"], z, len(cfg.top_mlp) + 1)[:, 0]
+
+
+def dlrm_loss(params, cfg: DLRMConfig, dense, ids, labels):
+    logit = dlrm_forward(params, cfg, dense, ids)
+    loss = bce_loss(logit, labels)
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring (retrieval_cand cells) -- FAVOR as the retrieval layer
+# ---------------------------------------------------------------------------
+def retrieval_scores(user_vec, item_table):
+    """Factorized dot scoring: (B, d) x (N, d) -> (B, N)."""
+    return user_vec @ item_table.T
+
+
+def retrieval_topk_filtered(user_vec, item_table, programs, attrs_int,
+                            attrs_float, k: int = 100, use_pallas: bool = False):
+    """Top-k candidates under attribute filters, served by FAVOR's PreFBF
+    machinery (the paper's technique as the recsys retrieval layer).
+
+    Max-inner-product -> min-L2 uses the exact augmentation reduction
+    (Shrivastava & Li): give every item the *constant* augmented norm
+    M^2 = max_row |v|^2 (the virtual extra coordinate sqrt(M^2 - |v|^2)
+    contributes nothing to q.v since the query's extra coordinate is 0), so
+    the kernel's d2 = M^2 + |q|^2 - 2 q.v is >= (M - |q|)^2 >= 0 and exactly
+    MIP-ordered."""
+    if use_pallas:
+        from ..kernels.filtered_topk import ops as ft
+        m2 = jnp.max(jnp.sum(item_table * item_table, axis=-1))
+        norms = jnp.full((item_table.shape[0],), m2, jnp.float32)
+        ids, d = ft.filtered_topk(item_table, norms, attrs_int, attrs_float,
+                                  user_vec, programs, k=k)
+        qn = jnp.sum(user_vec * user_vec, axis=-1, keepdims=True)
+        scores = 0.5 * (m2 + qn - d * d)       # invert the reduction
+        return ids, jnp.where(ids >= 0, scores, -jnp.inf)
+    from ..core import filters as F
+    scores = retrieval_scores(user_vec, item_table)
+    mask = F.eval_program_batched(programs, attrs_int, attrs_float, xp=jnp)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    sc, idx = jax.lax.top_k(scores, k)
+    return idx, sc

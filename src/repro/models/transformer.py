@@ -1,0 +1,321 @@
+"""Decoder-only LM covering the five assigned transformer architectures.
+
+Config-driven features: GQA (any n_kv), QKV bias (qwen1.5), attention/final
+logit softcaps + post-norms + embedding scaling + local/global alternating
+sliding windows (gemma2), MoE with top-k routing (olmoe) and dense-residual
+MoE (arctic), tied/untied embeddings.
+
+Layers run under ``jax.lax.scan`` over stacked (L, ...) parameters -- one
+layer's HLO regardless of depth (compile-time and cache friendly at 512-way
+SPMD).  ``remat`` wraps the scanned body with jax.checkpoint for activation
+rematerialization.  All matmuls carry logical-axis sharding via module.py
+rules; activations get explicit constraints at layer boundaries.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (AttnConfig, attention_decode, attention_train)
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm, softcap
+from .module import Ctx, constrain, fan_in_init, normal_init
+from .moe import MoEConfig, apply_moe, init_moe
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-6
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    local_window: int = 0             # sliding window for local layers
+    layer_pattern: str = "global"     # "global" | "local_global"
+    post_norms: bool = False          # gemma2 post-attn/post-mlp norms
+    gemma_norm: bool = False          # (1 + scale) RMSNorm
+    embed_scale: bool = False         # x *= sqrt(d_model)
+    tie_embeddings: bool = True
+    moe: MoEConfig | None = None
+    remat: bool = True
+    param_dtype: str = "float32"
+    unroll_layers: bool = False   # dry-run: unroll the layer scan so HLO cost
+                                  # analysis sees every layer (while bodies are
+                                  # otherwise counted once)
+    attn_chunk: int = 0           # >0: flash-style chunked attention (no S^2
+                                  # score tensor); perf lever, see EXPERIMENTS
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(self.d_model, self.n_heads, self.n_kv, self.hd,
+                          self.qkv_bias, self.attn_softcap, self.rope_theta)
+
+    def windows(self) -> jnp.ndarray:
+        if self.layer_pattern == "local_global":
+            w = [self.local_window if i % 2 == 0 else 0
+                 for i in range(self.n_layers)]
+        else:
+            w = [self.local_window] * self.n_layers
+        return jnp.asarray(w, jnp.int32)
+
+    def param_count(self) -> int:
+        d, ff, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        h, kv, hd = self.n_heads, self.n_kv, self.hd
+        attn = d * h * hd * 2 + d * kv * hd * 2
+        if self.moe:
+            m = self.moe
+            mlp = d * m.n_experts + m.n_experts * 3 * d * m.d_ff
+            if m.dense_residual:
+                mlp += 3 * d * (m.d_ff_dense or m.d_ff)
+        else:
+            mlp = 3 * d * ff
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + mlp) + emb
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        h, kv, hd = self.n_heads, self.n_kv, self.hd
+        m = self.moe
+        attn = d * h * hd * 2 + d * kv * hd * 2
+        mlp = d * m.n_experts + m.top_k * 3 * d * m.d_ff
+        if m.dense_residual:
+            mlp += 3 * d * (m.d_ff_dense or m.d_ff)
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + mlp) + emb
+
+
+# ---------------------------------------------------------------------------
+# Init (stacked layers: every layer weight carries a leading (L,) axis)
+# ---------------------------------------------------------------------------
+def init_lm(ctx: Ctx, cfg: LMConfig):
+    L, d = cfg.n_layers, cfg.d_model
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    ctx.param("embed", (cfg.vocab, d), ("vocab", "embed"), normal_init(0.02))
+    if not cfg.tie_embeddings:
+        ctx.param("lm_head", (d, cfg.vocab), ("embed", "vocab"), normal_init(0.02))
+
+    lyr = ctx.scope("layers")
+    one = lambda: None  # readability
+    lyr.param("pre_attn_norm", (L, d), ("layers", "embed"),
+              lambda k, s, dt: jnp.zeros(s, dt) if cfg.gemma_norm else jnp.ones(s, dt))
+    lyr.param("pre_mlp_norm", (L, d), ("layers", "embed"),
+              lambda k, s, dt: jnp.zeros(s, dt) if cfg.gemma_norm else jnp.ones(s, dt))
+    if cfg.post_norms:
+        lyr.param("post_attn_norm", (L, d), ("layers", "embed"),
+                  lambda k, s, dt: jnp.zeros(s, dt) if cfg.gemma_norm else jnp.ones(s, dt))
+        lyr.param("post_mlp_norm", (L, d), ("layers", "embed"),
+                  lambda k, s, dt: jnp.zeros(s, dt) if cfg.gemma_norm else jnp.ones(s, dt))
+    if cfg.norm == "layernorm":
+        lyr.param("pre_attn_bias", (L, d), ("layers", "embed"),
+                  lambda k, s, dt: jnp.zeros(s, dt))
+        lyr.param("pre_mlp_bias", (L, d), ("layers", "embed"),
+                  lambda k, s, dt: jnp.zeros(s, dt))
+
+    att = lyr.scope("attn")
+    att.param("wq", (L, d, h, hd), ("layers", "embed", "heads", "head_dim"), fan_in_init())
+    att.param("wk", (L, d, kv, hd), ("layers", "embed", "kv_heads", "head_dim"), fan_in_init())
+    att.param("wv", (L, d, kv, hd), ("layers", "embed", "kv_heads", "head_dim"), fan_in_init())
+    att.param("wo", (L, h, hd, d), ("layers", "heads", "head_dim", "embed"), fan_in_init())
+    if cfg.qkv_bias:
+        att.param("bq", (L, h, hd), ("layers", "heads", "head_dim"),
+                  lambda k, s, dt: jnp.zeros(s, dt))
+        att.param("bk", (L, kv, hd), ("layers", "kv_heads", "head_dim"),
+                  lambda k, s, dt: jnp.zeros(s, dt))
+        att.param("bv", (L, kv, hd), ("layers", "kv_heads", "head_dim"),
+                  lambda k, s, dt: jnp.zeros(s, dt))
+
+    if cfg.moe:
+        m = cfg.moe
+        mo = lyr.scope("moe")
+        mo.param("router", (L, d, m.n_experts), ("layers", "embed", "experts"),
+                 normal_init(0.02))
+        mo.param("wi_gate", (L, m.n_experts, d, m.d_ff),
+                 ("layers", "experts", "embed", "expert_mlp"), fan_in_init())
+        mo.param("wi_up", (L, m.n_experts, d, m.d_ff),
+                 ("layers", "experts", "embed", "expert_mlp"), fan_in_init())
+        mo.param("wo", (L, m.n_experts, m.d_ff, d),
+                 ("layers", "experts", "expert_mlp", "embed"), fan_in_init())
+        if m.dense_residual:
+            dff = m.d_ff_dense or m.d_ff
+            mo.param("dense_gate", (L, d, dff), ("layers", "embed", "mlp"), fan_in_init())
+            mo.param("dense_up", (L, d, dff), ("layers", "embed", "mlp"), fan_in_init())
+            mo.param("dense_down", (L, dff, d), ("layers", "mlp", "embed"), fan_in_init())
+    else:
+        ml = lyr.scope("mlp")
+        ml.param("gate", (L, d, cfg.d_ff), ("layers", "embed", "mlp"), fan_in_init())
+        ml.param("up", (L, d, cfg.d_ff), ("layers", "embed", "mlp"), fan_in_init())
+        ml.param("down", (L, cfg.d_ff, d), ("layers", "mlp", "embed"), fan_in_init())
+
+    ctx.param("final_norm", (d,), ("embed",),
+              lambda k, s, dt: jnp.zeros(s, dt) if cfg.gemma_norm else jnp.ones(s, dt))
+
+
+def _norm(cfg, scale, bias, x):
+    p = {"scale": scale}
+    if bias is not None:
+        p["bias"] = bias
+    return apply_norm(p, x, cfg.norm, cfg.norm_eps, gemma_style=cfg.gemma_norm)
+
+
+# ---------------------------------------------------------------------------
+# Layer body (used by train/prefill/decode scans)
+# ---------------------------------------------------------------------------
+def _layer(cfg: LMConfig, lp: dict, h, window, mesh, decode_state=None):
+    """One transformer layer.  decode_state = (cache_k, cache_v, pos) or None.
+    Returns (h, aux, new_caches_or_kv)."""
+    bias_a = lp.get("pre_attn_bias")
+    bias_m = lp.get("pre_mlp_bias")
+    x = _norm(cfg, lp["pre_attn_norm"], bias_a, h)
+    if decode_state is None:
+        attn_out, kvs = attention_train(lp["attn"], x, cfg.attn_cfg, window,
+                                        chunk=cfg.attn_chunk,
+                                        unroll=cfg.unroll_layers)
+        new_cache = kvs
+    else:
+        ck, cv, pos = decode_state
+        attn_out, ck, cv = attention_decode(lp["attn"], x, ck, cv, pos,
+                                            cfg.attn_cfg, window)
+        new_cache = (ck, cv)
+    if cfg.post_norms:
+        attn_out = _norm(cfg, lp["post_attn_norm"], None, attn_out)
+    h = h + attn_out
+    h = constrain(h, mesh, "batch", "seq", "embed")
+
+    x = _norm(cfg, lp["pre_mlp_norm"], bias_m, h)
+    aux = {}
+    if cfg.moe:
+        mlp_out, aux = apply_moe(lp["moe"], x, cfg.moe)
+    else:
+        mlp_out = apply_mlp(lp["mlp"], x)
+    if cfg.post_norms:
+        mlp_out = _norm(cfg, lp["post_mlp_norm"], None, mlp_out)
+    h = h + mlp_out
+    h = constrain(h, mesh, "batch", "seq", "embed")
+    return h, aux, new_cache
+
+
+def _embed(params, cfg: LMConfig, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * math.sqrt(cfg.d_model)
+    return h
+
+
+def _logits(params, cfg: LMConfig, h):
+    h = _norm(cfg, params["final_norm"], None, h)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def forward_train(params, cfg: LMConfig, tokens, mesh=None):
+    """tokens (B, S) -> logits (B, S, V) f32 + moe aux dict."""
+    h = _embed(params, cfg, tokens).astype(jnp.bfloat16
+                                           if cfg.param_dtype == "bfloat16"
+                                           else jnp.float32)
+    h = constrain(h, mesh, "batch", "seq", "embed")
+    windows = cfg.windows()
+
+    def body(carry, xs):
+        lp, window = xs
+        h, aux_sum = carry
+        h, aux, _ = _layer(cfg, lp, h, window, mesh)
+        if aux:
+            aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+        return (h, aux_sum), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    aux0 = ({"lb_loss": jnp.zeros(()), "z_loss": jnp.zeros(()),
+             "dropped_frac": jnp.zeros(())} if cfg.moe else {})
+    (h, aux), _ = jax.lax.scan(body_fn, (h, aux0), (params["layers"], windows),
+                               unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    if cfg.moe:
+        aux = {k: v / cfg.n_layers for k, v in aux.items()}
+    return _logits(params, cfg, h), aux
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels, mesh=None,
+            lb_coef: float = 0.01, z_coef: float = 1e-3):
+    """Next-token cross entropy (labels = tokens shifted by caller; -1 pads)."""
+    logits, aux = forward_train(params, cfg, tokens, mesh)
+    valid = labels >= 0
+    lbl = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, lbl[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+    metrics = {"ce_loss": loss}
+    if cfg.moe:
+        loss = loss + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]
+        metrics.update(aux)
+    return loss, metrics
+
+
+def prefill(params, cfg: LMConfig, tokens, cache_len: int, mesh=None):
+    """tokens (B, S) -> (logits (B, V) f32 last position, caches)."""
+    b, s = tokens.shape
+    h = _embed(params, cfg, tokens)
+    h = constrain(h, mesh, "batch", "seq", "embed")
+    windows = cfg.windows()
+
+    def body(h, xs):
+        lp, window = xs
+        h, _, (k, v) = _layer(cfg, lp, h, window, mesh)
+        pad = cache_len - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return h, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, (ck, cv) = jax.lax.scan(body_fn, h, (params["layers"], windows),
+                               unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    logits = _logits(params, cfg, h[:, -1:, :])[:, 0]
+    return logits, {"k": ck, "v": cv}          # caches (L, B, cache_len, kv, hd)
+
+
+def decode_step(params, cfg: LMConfig, token, caches, pos, mesh=None):
+    """One-token decode.  token (B, 1); caches {k,v} (L, B, S, kv, hd);
+    pos scalar int32.  Returns (logits (B, V) f32, new caches)."""
+    h = _embed(params, cfg, token)
+    windows = cfg.windows()
+
+    def body(h, xs):
+        lp, window, ck, cv = xs
+        h, _, (ck, cv) = _layer(cfg, lp, h, window, mesh,
+                                decode_state=(ck, cv, pos))
+        return h, (ck, cv)
+
+    h, (ck, cv) = jax.lax.scan(body, h,
+                               (params["layers"], windows,
+                                caches["k"], caches["v"]),
+                               unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    logits = _logits(params, cfg, h)[:, 0]
+    return logits, {"k": ck, "v": cv}
+
+
+def make_cache_specs(cfg: LMConfig, batch: int, cache_len: int):
+    shape = (cfg.n_layers, batch, cache_len, cfg.n_kv, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16)}

@@ -1,0 +1,9 @@
+"""TPU v5e hardware constants (the TARGET machine; this container is CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, bf16
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link (~ both directions usable)
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512
+HBM_PER_CHIP = 16 * 2**30     # 16 GiB

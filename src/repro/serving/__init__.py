@@ -1,0 +1,3 @@
+from .engine import Request, Response, ServeEngine
+
+__all__ = ["Request", "Response", "ServeEngine"]

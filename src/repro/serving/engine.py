@@ -1,0 +1,108 @@
+"""Batched FAVOR serving engine (paper Figure 1 online phase, production
+shape): request queue -> batch assembly -> selector routing -> per-route
+compiled executables -> response reassembly + latency accounting.
+
+Routing (section 4.1) happens on estimated selectivity *before* search; the
+engine groups each assembled batch into a brute sub-batch and a graph
+sub-batch so every executable runs with uniform static shapes (one XLA
+program per route, padded to bucket sizes to bound recompilation).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import filters as F
+from ..core.favor import FavorIndex
+
+
+@dataclass
+class Request:
+    rid: int
+    query: np.ndarray
+    flt: "F.Filter"
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class Response:
+    rid: int
+    ids: np.ndarray
+    dists: np.ndarray
+    route: str
+    p_hat: float
+    latency_s: float
+
+
+def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // buckets[-1]) * buckets[-1]
+
+
+class ServeEngine:
+    """Single-host engine over a FavorIndex (the sharded variant swaps the
+    search calls for distributed.make_serve_fns; same control flow)."""
+
+    def __init__(self, index: FavorIndex, k: int = 10, ef: int = 100,
+                 max_batch: int = 256, max_wait_ms: float = 2.0):
+        self.index = index
+        self.k, self.ef = k, ef
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.queue: list[Request] = []
+        self.stats = {"graph": 0, "brute": 0, "batches": 0}
+        self.latencies: list[float] = []
+        self._next_rid = 0
+
+    def submit(self, query: np.ndarray, flt: "F.Filter") -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(query, np.float32), flt))
+        return rid
+
+    def _assemble(self) -> list[Request]:
+        take = min(len(self.queue), self.max_batch)
+        batch, self.queue = self.queue[:take], self.queue[take:]
+        return batch
+
+    def step(self) -> list[Response]:
+        """Drain one batch; returns completed responses."""
+        if not self.queue:
+            return []
+        batch = self._assemble()
+        self.stats["batches"] += 1
+        queries = np.stack([r.query for r in batch])
+        flts = [r.flt for r in batch]
+        # bucket-pad so each (route, size) pair reuses a compiled program
+        b = _bucket(len(batch))
+        if b > len(batch):
+            queries = np.concatenate(
+                [queries, np.repeat(queries[-1:], b - len(batch), 0)])
+            flts = flts + [flts[-1]] * (b - len(batch))
+        res = self.index.search(queries, flts, k=self.k, ef=self.ef)
+        t_done = time.perf_counter()
+        out = []
+        for i, r in enumerate(batch):
+            route = "brute" if res.routed_brute[i] else "graph"
+            self.stats[route] += 1
+            lat = t_done - r.t_submit
+            self.latencies.append(lat)
+            out.append(Response(r.rid, res.ids[i], res.dists[i], route,
+                                float(res.p_hat[i]), lat))
+        return out
+
+    def run(self, until_empty: bool = True) -> list[Response]:
+        out = []
+        while self.queue:
+            out.extend(self.step())
+        return out
+
+    def latency_percentiles(self) -> dict:
+        if not self.latencies:
+            return {}
+        arr = np.asarray(self.latencies) * 1e3
+        return {f"p{p}": float(np.percentile(arr, p)) for p in (50, 90, 99)}

@@ -1,0 +1,94 @@
+"""Optimizers from scratch (no optax): AdamW + SGD-momentum, global-norm
+clipping, warmup-cosine schedules, and ZeRO-1-style optimizer-state sharding
+hooks (the state tree reuses the parameter logical axes, so mapping "data"
+into the rules table shards moments across the data axis)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    kind: str = "adamw"  # adamw | sgdm
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict  # unused for sgdm (zeros-like placeholder kept for uniform tree)
+
+
+def init_opt_state(params, cfg: OptConfig) -> OptState:
+    # moments are f32 regardless of (possibly bf16) param dtype
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    zeros = jax.tree.map(f32, params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(f32, params)
+                    if cfg.kind == "adamw" else zeros)
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac * lr."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptConfig):
+    """One optimizer step.  Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step.astype(jnp.float32))
+    b1, b2 = cfg.betas
+
+    if cfg.kind == "adamw":
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                          jnp.square(g.astype(v.dtype)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            u = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(m.dtype)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        new_state = OptState(step=step, mu=mu, nu=nu)
+    else:  # sgd + momentum
+        mu = jax.tree.map(lambda m, g: b1 * m + g.astype(m.dtype),
+                          state.mu, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mu)
+        new_state = OptState(step=step, mu=mu, nu=state.nu)
+
+    return new_params, new_state, {"lr": lr, "grad_norm": gn}

@@ -1,0 +1,21 @@
+import numpy as np
+import pytest
+
+from repro.core import (AttributeTable, FavorIndex, HnswParams, paper_schema,
+                        random_attributes)
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    rng = np.random.default_rng(7)
+    n, d = 2000, 16
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    schema = paper_schema()
+    attrs = random_attributes(schema, n, seed=11)
+    return vecs, attrs, schema
+
+
+@pytest.fixture(scope="session")
+def small_index(small_dataset):
+    vecs, attrs, _ = small_dataset
+    return FavorIndex.build(vecs, attrs, HnswParams(M=8, efc=48, seed=3))

@@ -1,0 +1,63 @@
+"""Sharded serve correctness: runs a subprocess with 8 fake CPU devices
+(the main test process must keep the default single-device view)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import *
+    from repro.core import distributed as dist, refimpl
+    from repro.core.search import SearchConfig
+
+    assert len(jax.devices()) == 8
+    rng = np.random.default_rng(0)
+    N, d, S = 4096, 16, 4
+    vecs = rng.normal(size=(N, d)).astype(np.float32)
+    schema = paper_schema()
+    attrs = random_attributes(schema, N, seed=1)
+    sh = dist.build_sharded(vecs, attrs, S, HnswParams(M=8, efc=40, seed=0))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    fns = dist.make_serve_fns(mesh, SearchConfig(k=10, ef=48))
+    db = dist.device_put_sharded_db(sh.arrays, mesh, fns["db_specs"])
+
+    flt = paper_filters(schema)["equality_bool"]
+    Q = 16
+    queries = rng.normal(size=(Q, d)).astype(np.float32)
+    progs = stack_programs([compile_filter(flt, schema)] * Q)
+    progs = {k: jnp.asarray(v) for k, v in progs.items()}
+
+    mask = filters.eval_program(compile_filter(flt, schema), attrs.ints, attrs.floats)
+    p_hat = np.asarray(fns["estimate"](db, progs))
+    assert abs(p_hat.mean() - mask.mean()) < 0.08, p_hat
+
+    ids, ds = (np.asarray(x) for x in fns["serve_graph"](db, queries, progs))
+    recs = [refimpl.recall_at_k(ids[i],
+            refimpl.bruteforce_filtered(vecs, mask, queries[i], 10)[0], 10)
+            for i in range(Q)]
+    assert np.mean(recs) >= 0.9, np.mean(recs)
+
+    bids, _ = (np.asarray(x) for x in fns["serve_brute"](db, queries, progs))
+    recs_b = [refimpl.recall_at_k(bids[i],
+              refimpl.bruteforce_filtered(vecs, mask, queries[i], 10)[0], 10)
+              for i in range(Q)]
+    assert np.mean(recs_b) == 1.0, np.mean(recs_b)
+    # global ids must be valid row indices
+    assert ((ids >= -1) & (ids < N)).all()
+    print("DISTRIBUTED_OK", np.mean(recs), np.mean(recs_b))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_serve_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env, cwd=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), capture_output=True, text=True,
+        timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "DISTRIBUTED_OK" in r.stdout

@@ -1,0 +1,127 @@
+"""Filter algebra + DNF compiler: unit and property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filters as F
+
+SCHEMA = F.paper_schema(n_bool=1, n_int=2, n_float=2)
+
+
+def _mask(flt, attrs):
+    prog = F.compile_filter(flt, SCHEMA)
+    return F.eval_program(prog, attrs.ints, attrs.floats)
+
+
+@pytest.fixture(scope="module")
+def attrs():
+    return F.random_attributes(SCHEMA, 500, seed=0)
+
+
+def test_equality_bool(attrs):
+    m = _mask(F.Equality("b0", True), attrs)
+    assert m.sum() == (attrs.ints[:, 0] == 1).sum()
+
+
+def test_equality_int(attrs):
+    m = _mask(F.Equality("i0", 3), attrs)
+    np.testing.assert_array_equal(m, attrs.ints[:, 1] == 3)
+
+
+def test_inclusion(attrs):
+    m = _mask(F.Inclusion("i1", [1, 4, 7]), attrs)
+    np.testing.assert_array_equal(m, np.isin(attrs.ints[:, 2], [1, 4, 7]))
+
+
+def test_range_float(attrs):
+    m = _mask(F.Range("f0", 20.0, 60.0), attrs)
+    col = attrs.floats[:, 0]
+    np.testing.assert_array_equal(m, (col >= 20.0) & (col <= 60.0))
+
+
+def test_range_int(attrs):
+    m = _mask(F.Range("i0", 2, 5), attrs)
+    col = attrs.ints[:, 1]
+    np.testing.assert_array_equal(m, (col >= 2) & (col <= 5))
+
+
+def test_logic_and_or_not(attrs):
+    f = F.And(F.Equality("b0", True), F.Or(F.Range("f0", None, 50.0),
+                                           F.Not(F.Inclusion("i0", [0, 1, 2]))))
+    m = _mask(f, attrs)
+    expect = np.array([F.eval_filter_python(f, attrs.row(i)) for i in range(attrs.n)])
+    np.testing.assert_array_equal(m, expect)
+
+
+def test_true_false(attrs):
+    assert _mask(F.TrueFilter(), attrs).all()
+    assert not _mask(F.FalseFilter(), attrs).any()
+
+
+def test_not_range_strict_bounds(attrs):
+    f = F.Not(F.Range("f1", 25.0, 75.0))
+    m = _mask(f, attrs)
+    col = attrs.floats[:, 1]
+    np.testing.assert_array_equal(m, (col < 25.0) | (col > 75.0))
+
+
+def test_width_overflow_raises():
+    clauses = [F.Not(F.Range("f0", i * 10.0, i * 10.0 + 5.0)) for i in range(8)]
+    with pytest.raises(ValueError):
+        F.compile_filter(F.Or(*[F.And(*clauses)]), SCHEMA, width=4)
+
+
+def test_stack_programs_pads():
+    p1 = F.compile_filter(F.Equality("b0", True), SCHEMA, width=2)
+    p2 = F.compile_filter(F.Not(F.Range("f0", 10.0, 20.0)), SCHEMA, width=4)
+    batch = F.stack_programs([p1, p2])
+    assert batch["valid"].shape == (2, 4)
+
+
+def test_gathered_eval_matches_batched(attrs):
+    progs = [F.compile_filter(F.Equality("i0", v), SCHEMA) for v in (1, 2, 3)]
+    batch = F.stack_programs(progs)
+    rows = np.array([[0, 1, 2], [3, 4, 5], [6, 7, 8]])
+    g = F.eval_program_gathered(batch, attrs.ints[rows], attrs.floats[rows])
+    for b in range(3):
+        full = F.eval_program(progs[b], attrs.ints, attrs.floats)
+        np.testing.assert_array_equal(g[b], full[rows[b]])
+
+
+# -- property: compiled program == AST interpreter ---------------------------
+@st.composite
+def filter_trees(draw, depth=0):
+    leaf = st.one_of(
+        st.builds(F.Equality, st.just("b0"), st.booleans()),
+        st.builds(F.Equality, st.just("i0"), st.integers(0, 9)),
+        st.builds(lambda v: F.Inclusion("i1", v),
+                  st.lists(st.integers(0, 9), min_size=1, max_size=4)),
+        st.builds(lambda lo, w: F.Range("f0", lo, lo + w),
+                  st.floats(0, 90, allow_nan=False, width=32),
+                  st.floats(0.5, 50, allow_nan=False, width=32)),
+        st.builds(lambda lo, w: F.Range("f1", lo, lo + w),
+                  st.floats(0, 90, allow_nan=False, width=32),
+                  st.floats(0.5, 50, allow_nan=False, width=32)),
+    )
+    if depth >= 2:
+        return draw(leaf)
+    sub = filter_trees(depth=depth + 1)
+    return draw(st.one_of(
+        leaf,
+        st.builds(lambda a, b: F.And(a, b), sub, sub),
+        st.builds(lambda a, b: F.Or(a, b), sub, sub),
+        st.builds(F.Not, leaf),
+    ))
+
+
+@settings(max_examples=60, deadline=None)
+@given(filter_trees())
+def test_property_program_matches_ast(flt):
+    attrs = F.random_attributes(SCHEMA, 200, seed=42)
+    try:
+        prog = F.compile_filter(flt, SCHEMA, width=16)
+    except ValueError:
+        return  # DNF width overflow is allowed to raise
+    m = F.eval_program(prog, attrs.ints, attrs.floats)
+    expect = np.array([F.eval_filter_python(flt, attrs.row(i)) for i in range(attrs.n)])
+    np.testing.assert_array_equal(m, expect)

@@ -1,0 +1,100 @@
+"""HNSW construction invariants + oracle search quality."""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import filters as F
+from repro.core import refimpl
+from repro.core.hnsw import HnswIndex, HnswParams, build_hnsw
+
+
+@pytest.fixture(scope="module")
+def built(small_dataset_mod):
+    vecs, _, _ = small_dataset_mod
+    return build_hnsw(vecs, HnswParams(M=8, efc=48, seed=3)), vecs
+
+
+@pytest.fixture(scope="module")
+def small_dataset_mod():
+    rng = np.random.default_rng(7)
+    vecs = rng.normal(size=(1500, 16)).astype(np.float32)
+    return vecs, None, None
+
+
+def test_degree_bounds(built):
+    idx, _ = built
+    for level, arr in enumerate(idx.levels):
+        m = idx.params.M0 if level == 0 else idx.params.M
+        assert arr.shape[1] == m
+        assert ((arr >= -1) & (arr < idx.n)).all()
+
+
+def test_no_self_loops(built):
+    idx, _ = built
+    for arr in idx.levels:
+        rows = np.arange(idx.n)[:, None]
+        assert not np.any(arr == rows)
+
+
+def test_base_layer_connected(built):
+    idx, _ = built
+    # BFS from entry point over level-0 edges reaches (almost) everything
+    adj = idx.levels[0]
+    seen = np.zeros(idx.n, bool)
+    frontier = [idx.entry_point]
+    seen[idx.entry_point] = True
+    while frontier:
+        nxt = adj[frontier].ravel()
+        nxt = nxt[nxt >= 0]
+        nxt = nxt[~seen[nxt]]
+        seen[np.unique(nxt)] = True
+        frontier = np.unique(nxt).tolist()
+    assert seen.mean() > 0.99
+
+
+def test_level_distribution(built):
+    idx, _ = built
+    counts = collections.Counter(idx.node_level.tolist())
+    assert counts[0] > 0.8 * idx.n  # exponential decay
+    assert idx.max_level == max(counts)
+
+
+def test_delta_d_positive_and_sane(built):
+    idx, vecs = built
+    assert idx.delta_d > 0
+    # compare against a direct estimate of the m-th NN slope on a sample
+    rng = np.random.default_rng(0)
+    sample = rng.choice(idx.n, 50, replace=False)
+    slopes = []
+    for s in sample:
+        d = np.linalg.norm(vecs - vecs[s], axis=1)
+        d = np.sort(d)[1:101]
+        slopes.append((d[-1] - d[9]) / (len(d) - 10))
+    direct = np.mean(slopes)
+    assert 0.3 * direct < idx.delta_d < 3.0 * direct
+
+
+def test_unfiltered_recall(built):
+    idx, vecs = built
+    rng = np.random.default_rng(1)
+    qs = rng.normal(size=(20, vecs.shape[1])).astype(np.float32)
+    mask = np.ones(idx.n, bool)
+    recs = []
+    for q in qs:
+        truth, _ = refimpl.bruteforce_filtered(vecs, mask, q, 10)
+        ids, _, _ = refimpl.favor_search(idx, q, mask, 10, 64, 0.0, pbar_min=0.0)
+        recs.append(refimpl.recall_at_k(ids, truth, 10))
+    assert np.mean(recs) >= 0.93
+
+
+def test_save_load_roundtrip(built, tmp_path):
+    idx, _ = built
+    p = str(tmp_path / "idx.npz")
+    idx.save(p)
+    idx2 = HnswIndex.load(p)
+    assert idx2.n == idx.n and idx2.max_level == idx.max_level
+    assert idx2.entry_point == idx.entry_point
+    assert abs(idx2.delta_d - idx.delta_d) < 1e-9
+    for a, b in zip(idx.levels, idx2.levels):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,78 @@
+"""PreFBF fused scan == exact brute force, across chunkings and paddings."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compile_filter, paper_schema, random_attributes, stack_programs
+from repro.core import filters as F
+from repro.core import prefbf, refimpl
+
+SCHEMA = paper_schema()
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(3)
+    n, d = 3001, 24  # deliberately non-multiple of chunk
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    attrs = random_attributes(SCHEMA, n, seed=4)
+    norms = np.einsum("nd,nd->n", vecs, vecs).astype(np.float32)
+    return vecs, norms, attrs
+
+
+@pytest.mark.parametrize("chunk", [256, 512, 1024])
+def test_matches_bruteforce(db, chunk):
+    vecs, norms, attrs = db
+    rng = np.random.default_rng(9)
+    queries = rng.normal(size=(8, vecs.shape[1])).astype(np.float32)
+    flt = F.Range("f0", 20.0, 70.0)
+    prog = compile_filter(flt, SCHEMA)
+    mask = F.eval_program(prog, attrs.ints, attrs.floats)
+    progs = {k: jnp.asarray(v) for k, v in
+             stack_programs([prog] * len(queries)).items()}
+    pv, pn, pi, pf = prefbf.pad_db(vecs, norms, attrs.ints, attrs.floats, chunk)
+    ids, dists = prefbf.prefbf_topk(jnp.asarray(pv), jnp.asarray(pn),
+                                    jnp.asarray(pi), jnp.asarray(pf),
+                                    jnp.asarray(queries), progs, k=10, chunk=chunk)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    for i, q in enumerate(queries):
+        t_ids, t_d = refimpl.bruteforce_filtered(vecs, mask, q, 10)
+        assert refimpl.recall_at_k(ids[i], t_ids, 10) == 1.0
+        np.testing.assert_allclose(dists[i][: len(t_d)], t_d, rtol=2e-4, atol=2e-4)
+
+
+def test_per_query_filters(db):
+    vecs, norms, attrs = db
+    rng = np.random.default_rng(10)
+    queries = rng.normal(size=(4, vecs.shape[1])).astype(np.float32)
+    flts = [F.Equality("i0", v) for v in range(4)]
+    progs_np = stack_programs([compile_filter(f, SCHEMA) for f in flts])
+    progs = {k: jnp.asarray(v) for k, v in progs_np.items()}
+    pv, pn, pi, pf = prefbf.pad_db(vecs, norms, attrs.ints, attrs.floats, 512)
+    ids, _ = prefbf.prefbf_topk(jnp.asarray(pv), jnp.asarray(pn), jnp.asarray(pi),
+                                jnp.asarray(pf), jnp.asarray(queries), progs,
+                                k=10, chunk=512)
+    ids = np.asarray(ids)
+    for i, (q, f) in enumerate(zip(queries, flts)):
+        mask = F.eval_program(compile_filter(f, SCHEMA), attrs.ints, attrs.floats)
+        t_ids, _ = refimpl.bruteforce_filtered(vecs, mask, q, 10)
+        assert refimpl.recall_at_k(ids[i], t_ids, 10) == 1.0
+
+
+def test_fewer_matches_than_k(db):
+    vecs, norms, attrs = db
+    rng = np.random.default_rng(11)
+    q = rng.normal(size=(1, vecs.shape[1])).astype(np.float32)
+    flt = F.And(F.Equality("i0", 0), F.Range("f0", 0.0, 1.0))  # ~0.1%
+    prog = compile_filter(flt, SCHEMA)
+    mask = F.eval_program(prog, attrs.ints, attrs.floats)
+    progs = {k: jnp.asarray(v) for k, v in stack_programs([prog]).items()}
+    pv, pn, pi, pf = prefbf.pad_db(vecs, norms, attrs.ints, attrs.floats, 512)
+    k = max(10, int(mask.sum()) + 5)
+    ids, dists = prefbf.prefbf_topk(jnp.asarray(pv), jnp.asarray(pn),
+                                    jnp.asarray(pi), jnp.asarray(pf),
+                                    jnp.asarray(q), progs, k=k, chunk=512)
+    ids = np.asarray(ids)[0]
+    n_found = (ids >= 0).sum()
+    assert n_found == mask.sum()
+    assert (np.asarray(dists)[0][n_found:] == np.inf).all()

@@ -1,0 +1,56 @@
+"""Roofline machinery: HLO collective parser + three-term model."""
+import numpy as np
+
+from repro.roofline import analysis as RA
+from repro.roofline import hw
+
+
+def test_parse_single_and_tuple_collectives():
+    text = """
+  %all-reduce.8 = (f32[4096,39,10]{2,1,0}, f32[4096,39,1]{2,1,0}) all-reduce(%a, %b), replica_groups=[16,16]<=[256], use_global_device_ids=true
+  %all-reduce.1 = f32[16,4096,2304]{2,1,0} all-reduce(%c), channel_id=1, replica_groups=[16,16]<=[256]
+  %ag = bf16[26,2304,4,256]{3,2,1,0} all-gather(%d), replica_groups=[8,32]<=[256], dimensions={1}
+  %rs = f32[64,128]{1,0} reduce-scatter(%e), replica_groups=[16,16]<=[256]
+  %a2a = f32[64,128]{1,0} all-to-all(%f), replica_groups=[16,16]<=[256]
+  %cp = f32[64,128]{1,0} collective-permute(%g), source_target_pairs={{0,1}}
+  %ard = f32[8]{0} all-reduce-done(%x)
+  %ars = f32[8]{0} all-reduce-start(%y), replica_groups={{0,1},{2,3}}
+"""
+    st = RA.parse_collectives(text, 256)
+    assert st.counts == {"all-reduce": 3, "all-gather": 1, "reduce-scatter": 1,
+                         "all-to-all": 1, "collective-permute": 1}
+    exp = (2 * (15 / 16) * (4096 * 39 * 10 * 4 + 4096 * 39 * 1 * 4)   # tuple AR
+           + 2 * (15 / 16) * (16 * 4096 * 2304 * 4)                   # AR
+           + (31 / 32) * (26 * 2304 * 4 * 256 * 2)                    # AG
+           + 15 * (64 * 128 * 4)                                      # RS
+           + (15 / 16) * (64 * 128 * 4)                               # A2A
+           + 64 * 128 * 4                                             # CP
+           + 2 * (1 / 2) * 32)                                        # AR-start
+    np.testing.assert_allclose(st.link_bytes, exp, rtol=1e-9)
+
+
+def test_parse_ignores_non_collectives():
+    text = """
+  %dot.1 = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+  %fusion.2 = f32[64]{0} fusion(%all), calls=%computation_with_all_gather_name
+"""
+    st = RA.parse_collectives(text, 16)
+    assert st.counts == {}
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RA.Roofline(flops=hw.PEAK_FLOPS_BF16, hbm_bytes=hw.HBM_BW / 2,
+                    coll_link_bytes=hw.ICI_LINK_BW / 4, n_devices=256,
+                    collectives={}, model_flops=hw.PEAK_FLOPS_BF16 * 128)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 0.5) < 1e-9
+    assert abs(r.t_collective - 0.25) < 1e-9
+    assert r.bottleneck == "compute"
+    assert abs(r.useful_flops_frac - 0.5) < 1e-9
+    assert abs(r.roofline_frac - 0.5) < 1e-9
+
+
+def test_group_size_formats():
+    assert RA._group_size("[16,16]<=[256]", 999) == 16
+    assert RA._group_size("{{0,1,2,3}}", 999) == 4
+    assert RA._group_size(None, 77) == 77

@@ -1,0 +1,148 @@
+"""JAX production search vs the numpy oracle + baselines + end-to-end API."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (FavorIndex, SearchConfig, compile_filter,
+                        favor_graph_search, graph_arrays, paper_filters,
+                        rsf_graph_search, stack_programs)
+from repro.core import exclusion
+from repro.core import filters as F
+from repro.core import refimpl
+
+
+def _truth(vecs, mask, q, k):
+    return refimpl.bruteforce_filtered(vecs, mask, q, k)[0]
+
+
+@pytest.fixture(scope="module")
+def queries(small_dataset):
+    vecs, _, _ = small_dataset
+    rng = np.random.default_rng(5)
+    return rng.normal(size=(24, vecs.shape[1])).astype(np.float32)
+
+
+def _setup(small_index, small_dataset, name):
+    vecs, attrs, schema = small_dataset
+    flt = paper_filters(schema)[name]
+    prog = compile_filter(flt, schema)
+    mask = F.eval_program(prog, attrs.ints, attrs.floats)
+    return flt, prog, mask
+
+
+@pytest.mark.parametrize("scenario,ef", [("equality_bool", 80),
+                                         ("equality_int", 120),
+                                         ("inclusion", 80),
+                                         ("range_50", 80),
+                                         ("logic", 240)])
+def test_jax_matches_oracle_recall(small_index, small_dataset, queries, scenario, ef):
+    vecs, attrs, schema = small_dataset
+    flt, prog, mask = _setup(small_index, small_dataset, scenario)
+    p = mask.mean()
+    k = 10
+    D = float(exclusion.exclusion_distance(p, ef, small_index.delta_d))
+    progs = {kk: jnp.asarray(v) for kk, v in
+             stack_programs([prog] * len(queries)).items()}
+    cfg = SearchConfig(k=k, ef=ef)
+    out = favor_graph_search(small_index.g, jnp.asarray(queries), progs,
+                             jnp.full((len(queries),), D, jnp.float32), cfg)
+    rec_j, rec_o = [], []
+    for i, q in enumerate(queries):
+        t = _truth(vecs, mask, q, k)
+        oid, _, _ = refimpl.favor_search(small_index.index, q, mask, k, ef, D)
+        rec_o.append(refimpl.recall_at_k(oid, t, k))
+        rec_j.append(refimpl.recall_at_k(np.asarray(out["ids"][i]), t, k))
+    assert np.mean(rec_o) >= 0.85, f"oracle recall degraded: {np.mean(rec_o)}"
+    # fixed-capacity pools must track the unbounded-heap oracle closely
+    assert np.mean(rec_j) >= np.mean(rec_o) - 0.08
+
+
+def test_search_returns_only_targets(small_index, small_dataset, queries):
+    vecs, attrs, schema = small_dataset
+    flt, prog, mask = _setup(small_index, small_dataset, "equality_int")
+    res = small_index.search(queries, flt, k=10, ef=80)
+    for row in res.ids:
+        for v in row[row >= 0]:
+            assert mask[v], "non-target row leaked into S"
+
+
+def test_exclusion_beats_zero_D(small_index, small_dataset, queries):
+    """Ablation direction (paper Fig. 10): with D from Eq. 14 the search path
+    should touch at least as many targets per hop as with D = 0."""
+    vecs, attrs, schema = small_dataset
+    flt, prog, mask = _setup(small_index, small_dataset, "equality_int")
+    p = mask.mean()
+    k, ef = 10, 80
+    progs = {kk: jnp.asarray(v) for kk, v in
+             stack_programs([prog] * len(queries)).items()}
+    cfg = SearchConfig(k=k, ef=ef)
+    D = float(exclusion.exclusion_distance(p, ef, small_index.delta_d))
+    out_D = favor_graph_search(small_index.g, jnp.asarray(queries), progs,
+                               jnp.full((len(queries),), D), cfg)
+    out_0 = favor_graph_search(small_index.g, jnp.asarray(queries), progs,
+                               jnp.zeros((len(queries),)), cfg)
+    frac_D = np.asarray(out_D["path_td"]).sum() / max(1, np.asarray(out_D["hops"]).sum())
+    frac_0 = np.asarray(out_0["path_td"]).sum() / max(1, np.asarray(out_0["hops"]).sum())
+    assert frac_D >= frac_0 - 0.02
+
+
+def test_termination_guard_improves_recall(small_index, small_dataset, queries):
+    """Section 5.4: pbar_min=0.5 must not lose recall vs pbar_min=0."""
+    vecs, attrs, schema = small_dataset
+    flt, prog, mask = _setup(small_index, small_dataset, "equality_int")
+    k, ef = 10, 40
+    r_guard, r_plain = [], []
+    res_g = small_index.search(queries, flt, k=k, ef=ef, pbar_min=0.5, force="graph")
+    res_p = small_index.search(queries, flt, k=k, ef=ef, pbar_min=0.0, force="graph")
+    for i, q in enumerate(queries):
+        t = _truth(vecs, mask, q, k)
+        r_guard.append(refimpl.recall_at_k(res_g.ids[i], t, k))
+        r_plain.append(refimpl.recall_at_k(res_p.ids[i], t, k))
+    assert np.mean(r_guard) >= np.mean(r_plain) - 1e-9
+
+
+def test_rsf_baseline_runs(small_index, small_dataset, queries):
+    vecs, attrs, schema = small_dataset
+    flt, prog, mask = _setup(small_index, small_dataset, "equality_bool")
+    progs = {kk: jnp.asarray(v) for kk, v in
+             stack_programs([prog] * len(queries)).items()}
+    out = rsf_graph_search(small_index.g, jnp.asarray(queries), progs,
+                           SearchConfig(k=10, ef=80))
+    recs = [refimpl.recall_at_k(np.asarray(out["ids"][i]),
+                                _truth(vecs, mask, queries[i], 10), 10)
+            for i in range(len(queries))]
+    assert np.mean(recs) >= 0.8
+
+
+def test_selector_routing(small_index, small_dataset, queries):
+    vecs, attrs, schema = small_dataset
+    lowsel = F.And(F.Equality("i0", 3), F.Range("f0", 10.0, 16.0))  # ~0.6%
+    highsel = F.Equality("b0", True)  # 50%
+    res = small_index.search(queries[:8], [lowsel] * 4 + [highsel] * 4, k=5, ef=48)
+    assert res.routed_brute[:4].all(), f"low-sel not routed brute: {res.p_hat[:4]}"
+    assert not res.routed_brute[4:].any()
+
+
+def test_brute_route_exact(small_index, small_dataset, queries):
+    vecs, attrs, schema = small_dataset
+    flt, prog, mask = _setup(small_index, small_dataset, "logic")
+    res = small_index.search(queries, flt, k=10, ef=64, force="brute")
+    for i, q in enumerate(queries):
+        t = _truth(vecs, mask, q, 10)
+        assert refimpl.recall_at_k(res.ids[i], t, 10) == 1.0
+
+
+def test_empty_filter_returns_padding(small_index, queries):
+    res = small_index.search(queries[:4], F.FalseFilter(), k=5, ef=48)
+    assert (res.ids == -1).all()
+
+
+def test_save_load_end2end(small_index, small_dataset, queries, tmp_path):
+    vecs, attrs, schema = small_dataset
+    p = str(tmp_path / "favor")
+    small_index.save(p)
+    fi2 = FavorIndex.load(p)
+    flt = paper_filters(schema)["equality_bool"]
+    r1 = small_index.search(queries[:4], flt, k=5, ef=48)
+    r2 = fi2.search(queries[:4], flt, k=5, ef=48)
+    np.testing.assert_array_equal(r1.ids, r2.ids)

@@ -1,0 +1,99 @@
+"""Selectivity estimator (Eq. 1) + exclusion distance (Eq. 5/13/14)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import exclusion
+from repro.core import filters as F
+from repro.core import selectivity as S
+
+SCHEMA = F.paper_schema()
+
+
+def test_estimator_close_to_exact():
+    attrs = F.random_attributes(SCHEMA, 20000, seed=0)
+    prog = F.compile_filter(F.Equality("i0", 4), SCHEMA)
+    exact = S.exact_selectivity(prog, attrs)
+    idx = S.sample_indices(attrs.n, rate=0.05, seed=1)
+    est = float(S.estimate_selectivity(prog, attrs.ints[idx], attrs.floats[idx]))
+    assert abs(est - exact) < 0.03
+
+
+def test_relative_error_formula():
+    # Eq. 1 at the paper's example: million scale, p ~ 1%, 1% sampling
+    err = S.relative_error(n=10000, p=0.01, total=1_000_000)
+    assert 0.02 < err < 0.12  # ~3% (paper says ~1% order of magnitude)
+    assert S.relative_error(10000, 0.5, 1_000_000) < err  # decreasing in p
+    assert S.relative_error(20000, 0.01, 1_000_000) < err  # decreasing in n
+
+
+def test_batched_estimate_matches_single():
+    attrs = F.random_attributes(SCHEMA, 5000, seed=2)
+    filters = [F.Equality("b0", True), F.Range("f0", 0.0, 30.0)]
+    progs = [F.compile_filter(f, SCHEMA) for f in filters]
+    batch = F.stack_programs(progs)
+    idx = S.sample_indices(attrs.n, rate=0.1, seed=3)
+    est_b = S.estimate_selectivity_batched(batch, attrs.ints[idx], attrs.floats[idx])
+    for i, p in enumerate(progs):
+        est_1 = S.estimate_selectivity(p, attrs.ints[idx], attrs.floats[idx])
+        assert abs(float(est_b[i]) - float(est_1)) < 1e-6
+
+
+# -- exclusion distance -------------------------------------------------------
+def test_delta_d_from_curve_linear():
+    # perfectly linear curve -> slope recovered exactly
+    curve = 0.5 + 0.02 * np.arange(100)
+    assert abs(exclusion.delta_d_from_curve(curve, 10, 100) - 0.02) < 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0.011, 0.99), st.integers(30, 400))
+def test_property_eq14_inside_eq13_band(p, ef):
+    """The recommended D (Eq. 14, un-normalized) must sit inside the
+    admissible band of Ineq. 13 for k < ef/2 (section 5.4 requires ef>2k)."""
+    k = max(1, ef // 4)
+    dd = 0.05
+    lo, hi = exclusion.exclusion_bounds(p, ef, k, dd)
+    d = exclusion.exclusion_distance(p, ef, dd, normalize=False)
+    assert lo < d < hi
+
+
+def test_monotone_in_p():
+    dd = 0.02
+    ds = [exclusion.exclusion_distance(p, 100, dd) for p in (0.05, 0.1, 0.3, 0.9)]
+    assert all(a > b for a, b in zip(ds, ds[1:]))  # p up -> D down
+    # limits: p -> 1 gives D -> 0
+    assert exclusion.exclusion_distance(1.0, 100, dd) == pytest.approx(0.0)
+
+
+def test_clamp_keeps_finite():
+    assert np.isfinite(exclusion.exclusion_distance(0.0, 100, 0.02))
+
+
+def test_d_max_ablation():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(500, 8)).astype(np.float32)
+    mask = rng.random(500) < 0.5
+    q = rng.normal(size=(8,)).astype(np.float32)
+    dmax = exclusion.d_max(q, vecs, mask)
+    d = np.linalg.norm(vecs - q, axis=1)
+    assert dmax >= d[mask].max() - d[~mask].min() - 1e-6
+
+
+def test_d_strategy_regression():
+    """Fidelity iterations 0-1 (EXPERIMENTS.md section Perf): the default
+    strategy is "lo" -- the lower edge of Ineq. 13 (minimal sufficient
+    exclusion).  Pin the default + the band ordering lo < mid and the
+    magnitude failure modes of the two Eq. 14 readings."""
+    k, ef, p, dd = 10, 48, 0.05, 0.02
+    d_lo = exclusion.exclusion_distance(p, ef, dd, k=k)
+    d_mid = exclusion.exclusion_distance(p, ef, dd, k=k, strategy="mid")
+    d_nrm = exclusion.exclusion_distance(p, ef, dd, k=k, strategy="mid_norm")
+    lo, hi = exclusion.exclusion_bounds(p, ef, k, dd)
+    assert d_lo == pytest.approx(lo)
+    assert lo < d_mid < hi          # paper midpoint stays inside the band
+    assert d_nrm == pytest.approx(d_mid / ef)
+    # "lo" clears the S-radius requirement (Fig. 3c) by construction
+    assert d_lo >= (1 - p) * (k / p - 1) * dd - 1e-12
+    # backwards-compat mapping
+    assert exclusion.exclusion_distance(p, ef, dd, normalize=False) == d_mid

@@ -1,0 +1,145 @@
+"""Training substrate: optimizer, checkpoint atomicity/resume, fault-tolerant
+loop, gradient compression, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import paper_filters
+from repro.serving import ServeEngine
+from repro.training import checkpoint as ckpt
+from repro.training import compression, fault_tolerance as ft
+from repro.training import optimizer as opt
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    ocfg = opt.OptConfig(lr=0.2, weight_decay=0.0, total_steps=200,
+                         warmup_steps=0)
+    st = opt.init_opt_state(params, ocfg)
+    for _ in range(150):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, st, m = opt.apply_updates(params, g, st, ocfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = opt.clip_by_global_norm(g, 1.0)
+    assert abs(float(opt.global_norm(clipped)) - 1.0) < 1e-5
+    assert float(gn) > 1.0
+
+
+def test_schedule_warmup_cosine():
+    ocfg = opt.OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                         min_lr_frac=0.1)
+    assert float(opt.schedule(ocfg, jnp.asarray(5.0))) == pytest.approx(0.5)
+    assert float(opt.schedule(ocfg, jnp.asarray(10.0))) == pytest.approx(1.0)
+    assert float(opt.schedule(ocfg, jnp.asarray(100.0))) == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": np.arange(6).reshape(2, 3).astype(np.float32)},
+            "opt": (np.ones(3), np.zeros(2)), "step": 7}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, tree)
+    out, meta = ckpt.restore(d)
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(out["params"]["w"], tree["params"]["w"])
+    np.testing.assert_array_equal(out["opt"][0], tree["opt"][0])
+    assert int(out["step"]) == 7
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, {"x": np.asarray([s])}, keep=2)
+    assert ckpt.latest_step(d) == 5
+    steps = sorted(ckpt._complete_steps(d))
+    assert steps == [4, 5]
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    """A .tmp dir (simulated crash mid-save) must not be seen as a ckpt."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"x": np.asarray([1])})
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_fault_tolerant_loop_resumes(tmp_path):
+    d = str(tmp_path / "ck")
+
+    def step_fn(state, batch):
+        state["params"]["w"] = state["params"]["w"] + batch["x"].sum()
+        return state, {"loss": jnp.asarray(1.0)}
+
+    def data_iter(s):
+        return {"x": np.asarray([1.0])}, s + 1
+
+    state0 = {"params": {"w": np.asarray(0.0)}, "opt": {}, "data_state": 0,
+              "step": 0}
+    logs = []
+    st, m, wd = ft.run_loop(step_fn, dict(state0), data_iter, n_steps=10,
+                            ckpt_dir=d, save_every=4, log=logs.append)
+    assert float(st["params"]["w"]) == 10.0
+    # simulate restart from scratch state -> resumes from step 8
+    st2, _, _ = ft.run_loop(step_fn, dict(state0), data_iter, n_steps=12,
+                            ckpt_dir=d, save_every=4, log=logs.append)
+    assert any("resumed" in l for l in logs)
+    assert float(st2["params"]["w"]) == 12.0  # 8 from ckpt + 4 more
+
+
+def test_straggler_watchdog():
+    wd = ft.StragglerWatchdog(threshold=2.0)
+    for _ in range(10):
+        wd.record(0.1)
+    assert wd.record(0.5) is True
+    assert wd.slow_steps == 1
+    assert wd.record(0.1) is False
+
+
+# ---------------------------------------------------------------------------
+def test_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))}
+    res = compression.init_residual(g)
+    comp, res2 = compression.compress_tree(g, res)
+    # int8 blockwise error is small relative to signal
+    rel = float(jnp.linalg.norm(g["w"] - comp["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < 0.02
+    # error feedback: residual carries exactly the quantization error
+    np.testing.assert_allclose(np.asarray(comp["w"] + res2["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-6)
+    # accumulated over steps, EF keeps the running sum nearly unbiased
+    total_in, total_out = np.zeros(1000), np.zeros(1000)
+    res = compression.init_residual(g)
+    for i in range(20):
+        gi = {"w": jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))}
+        comp, res = compression.compress_tree(gi, res)
+        total_in += np.asarray(gi["w"])
+        total_out += np.asarray(comp["w"])
+    err = np.linalg.norm(total_in - total_out) / np.linalg.norm(total_in)
+    assert err < 0.05
+
+
+# ---------------------------------------------------------------------------
+def test_serve_engine(small_index, small_dataset):
+    vecs, attrs, schema = small_dataset
+    eng = ServeEngine(small_index, k=5, ef=48, max_batch=16)
+    flts = paper_filters(schema)
+    rng = np.random.default_rng(0)
+    rids = []
+    for i in range(40):
+        q = rng.normal(size=(vecs.shape[1],)).astype(np.float32)
+        name = list(flts)[i % len(flts)]
+        rids.append(eng.submit(q, flts[name]))
+    out = eng.run()
+    assert len(out) == 40
+    assert sorted(r.rid for r in out) == sorted(rids)
+    assert eng.stats["graph"] + eng.stats["brute"] == 40
+    pct = eng.latency_percentiles()
+    assert pct["p50"] <= pct["p99"]
