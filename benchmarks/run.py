@@ -18,11 +18,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (bench_ablation, bench_qps_recall, bench_selectivity,
-                   bench_verification)
+    from . import (bench_ablation, bench_qps_recall, bench_quant,
+                   bench_selectivity, bench_verification)
 
     benches = [
         ("qps_recall_figs4_5_8_9", bench_qps_recall.run),
+        ("quant_pq_adc", bench_quant.run),
         ("selectivity_fig7", bench_selectivity.run),
         ("exclusion_ablation_fig10", bench_ablation.run_exclusion),
         ("termination_fig11", bench_ablation.run_termination),

@@ -21,6 +21,21 @@ class FavorServeConfig:
     n_upper: int = 3
     width: int = 8
     batch: int = 1024
+    # compressed brute path (quant subsystem): 32 x uint8 PQ codes per
+    # 128-dim vector = 16x fewer bytes streamed by the PreFBF scan.
+    # Consumed by FavorIndex via quant_kwargs(); the sharded serve path
+    # (distributed.make_serve_fns) still streams float32 -- ROADMAP item.
+    quantize: str | None = "pq"
+    pq_m: int = 32
+    pq_nbits: int = 8
+    rerank: int = 8
+
+    def quant_kwargs(self) -> dict:
+        """FavorIndex(**...) kwargs realizing this config's memory format."""
+        if self.quantize is None:
+            return {}
+        return {"quantize": self.quantize, "pq_m": self.pq_m,
+                "pq_nbits": self.pq_nbits, "rerank": self.rerank}
 
 
 def spec() -> ArchSpec:

@@ -14,6 +14,7 @@ them in one program would force both computations on every query.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 
@@ -49,7 +50,10 @@ class FavorIndex:
 
     def __init__(self, index: HnswIndex, attrs: F.AttributeTable,
                  sel_cfg: selector.SelectorConfig | None = None,
-                 prefbf_chunk: int = 8192):
+                 prefbf_chunk: int = 8192, quantize: str | None = None,
+                 pq_m: int = 8, pq_nbits: int = 8, pq_train_iters: int = 20,
+                 pq_train_sample: int = 65536, rerank: int = 4,
+                 codebook=None):
         self.index = index
         self.attrs = attrs
         self.sel_cfg = sel_cfg or selector.SelectorConfig()
@@ -70,6 +74,39 @@ class FavorIndex:
                                        self.prefbf_chunk)
         self._pf = (jnp.asarray(pv), jnp.asarray(pn), jnp.asarray(pi),
                     jnp.asarray(pf))
+
+        # -- optional compressed-domain scan state (quant subsystem) ---------
+        if quantize is None and codebook is not None:
+            from ..quant import PQCodebook
+            quantize = "pq" if isinstance(codebook, PQCodebook) else "sq"
+        self.quantize = quantize
+        self.rerank = rerank
+        self.codebook = codebook
+        self._codes = None
+        self._cb_dev = None
+        if quantize is not None:
+            from .. import quant
+            if codebook is None:
+                if quantize == "pq":
+                    codebook = quant.train_pq(
+                        index.vectors, m=pq_m, nbits=pq_nbits,
+                        iters=pq_train_iters, sample=pq_train_sample,
+                        seed=index.params.seed)
+                elif quantize == "sq":
+                    codebook = quant.train_sq(index.vectors)
+                else:
+                    raise ValueError(
+                        f"quantize must be 'pq', 'sq' or None, got {quantize!r}")
+            self.codebook = codebook
+            # encode the *padded* DB so code rows align with the _pf arrays
+            # (padded rows encode the zero vector; their +inf norms gate them
+            # out of the compressed scan)
+            self._codes = jnp.asarray(quant.encode(codebook, pv))
+            if quantize == "pq":
+                self._cb_dev = (jnp.asarray(codebook.centroids),)
+            else:
+                self._cb_dev = (jnp.asarray(codebook.lo),
+                                jnp.asarray(codebook.scale))
 
     # -- construction --------------------------------------------------------
     @staticmethod
@@ -96,8 +133,16 @@ class FavorIndex:
     def search(self, queries: np.ndarray, filters, k: int = 10, ef: int = 100,
                *, pbar_min: float = 0.5, gamma: float = 1.0,
                force: str | None = None, use_pallas: bool = False,
-               cand_cap: int = 0) -> SearchResult:
-        """force in {None, "graph", "brute"} pins the route (benchmarks)."""
+               cand_cap: int = 0, use_pq: bool = False,
+               rerank: int | None = None) -> SearchResult:
+        """force in {None, "graph", "brute"} pins the route (benchmarks).
+
+        use_pq routes the brute path through the compressed ADC scan (the
+        index must have been built with quantize=); results are exact
+        float32 re-ranks of the top rerank*k ADC candidates."""
+        if use_pq and self.codebook is None:
+            raise ValueError("use_pq=True needs an index built with "
+                             "quantize='pq' or 'sq'")
         queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
         B = queries.shape[0]
         if isinstance(filters, F.Filter):
@@ -136,14 +181,37 @@ class FavorIndex:
             path_td[gi] = np.asarray(out["path_td"])
         if len(bi):
             progs_b = {kk: jnp.asarray(np.asarray(v)[bi]) for kk, v in programs.items()}
-            bid, bd = prefbf.prefbf_topk(*self._pf, queries[bi], progs_b,
-                                         k=k, chunk=self.prefbf_chunk,
-                                         use_pallas=use_pallas)
+            if use_pq:
+                from ..quant import adc as quant_adc
+                pv, pn, pi, pf = self._pf
+                rr = rerank or self.rerank
+                if self.quantize == "pq":
+                    bid, bd = quant_adc.pq_prefbf_topk(
+                        self._codes, pn, pi, pf, queries[bi], progs_b,
+                        self._cb_dev[0], pv, k=k, rerank=rr,
+                        chunk=self.prefbf_chunk, use_pallas=use_pallas)
+                else:
+                    bid, bd = quant_adc.sq_prefbf_topk(
+                        self._codes, self._cb_dev[0], self._cb_dev[1],
+                        pn, pi, pf, queries[bi], progs_b, pv,
+                        k=k, rerank=rr, chunk=self.prefbf_chunk)
+            else:
+                bid, bd = prefbf.prefbf_topk(*self._pf, queries[bi], progs_b,
+                                             k=k, chunk=self.prefbf_chunk,
+                                             use_pallas=use_pallas)
             ids[bi] = np.asarray(bid)
             dists[bi] = np.asarray(bd)
         jax.block_until_ready(dists)
         elapsed = time.perf_counter() - t0
         return SearchResult(ids, dists, p_hat, brute, hops, path_td, elapsed)
+
+    def bytes_per_vector(self, quantized: bool = False) -> int:
+        """Bytes streamed per DB row by the brute scan (float32 vs codes)."""
+        if quantized:
+            if self.codebook is None:
+                raise ValueError("index is not quantized")
+            return self.codebook.bytes_per_vector()
+        return 4 * self.index.dim
 
     # -- persistence -----------------------------------------------------------
     def save(self, path: str) -> None:
@@ -153,6 +221,9 @@ class FavorIndex:
                             kinds=np.array([c.kind for c in self.schema.columns]),
                             names=np.array([c.name for c in self.schema.columns]),
                             vocabs=np.array([c.vocab or 0 for c in self.schema.columns]))
+        if self.codebook is not None:
+            from ..quant import save_codebook
+            save_codebook(path + ".quant.npz", self.codebook)
 
     @staticmethod
     def load(path: str, **kw) -> "FavorIndex":
@@ -162,4 +233,8 @@ class FavorIndex:
             F.ColumnSpec(str(n), str(k), int(v) if str(k) == "int" else None)
             for n, k, v in zip(z["names"], z["kinds"], z["vocabs"]))
         attrs = F.AttributeTable(F.Schema(cols), z["ints"], z["floats"])
+        qpath = path + ".quant.npz"
+        if os.path.exists(qpath) and kw.get("codebook") is None:
+            from ..quant import load_codebook
+            kw["codebook"] = load_codebook(qpath)  # __init__ infers quantize
         return FavorIndex(index, attrs, **kw)

@@ -13,6 +13,9 @@ Kernels:
                      (graph-search expansion; paged-attention indirection idiom)
   embedding_bag   -- scalar-prefetch row gather + segment-sum bag reduce
                      (recsys embedding lookup; JAX has no native EmbeddingBag)
+  pq_adc          -- fused PQ asymmetric-distance LUT accumulate + filter
+                     mask + running top-R over uint8 code chunks (the
+                     compressed PreFBF scan; quant/adc.py re-ranks exactly)
 """
 import jax
 

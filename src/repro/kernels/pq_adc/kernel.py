@@ -1,0 +1,117 @@
+"""Fused PQ asymmetric-distance + filter mask + running top-R Pallas kernel.
+
+Compressed-domain sibling of kernels/filtered_topk: one invocation scans the
+whole code table for a tile of queries,
+
+  grid = (B/bq, N/bn); the n-axis is sequential so the running per-query
+  top-R candidate list lives in VMEM scratch across n-tiles.
+
+Per (i, j) step, entirely in VMEM:
+  * load the query LUT tile (bq, M*K) and the code tile (bn, M) int32,
+  * ADC accumulation as M one-hot matmuls: for each subspace the code column
+    becomes a (bn, K) one-hot and contracts with the (bq, K) LUT slice on the
+    MXU -- a gather expressed as arithmetic, since TPU Pallas has no
+    in-kernel vector gather,
+  * evaluate the DNF filter program on the attribute rows (shared helper
+    from filtered_topk) and mask failing + padded rows (norm >= BIG) to BIG,
+  * merge into the running (bq, R) top-R scratch (R = rerank * k; the exact
+    float32 re-rank happens outside, in quant/adc.py).
+
+VMEM working set per step: bq*M*K + bn*M + bn*K + bq*bn + bq*R floats;
+defaults (bq, bn, M, K) = (128, 512, 8, 256) stay well under 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..filtered_topk.kernel import BIG, _eval_program_tile, _topk_merge
+
+
+def _kernel(lut_ref, c_ref, n_ref, ai_ref, af_ref, valid_ref, imask_ref,
+            flo_ref, fhi_ref, od_ref, oi_ref, bd_ref, bi_ref,
+            *, r: int, bn: int, m: int, ksub: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        bd_ref[...] = jnp.full_like(bd_ref, BIG)
+        bi_ref[...] = jnp.full_like(bi_ref, -1)
+
+    lut = lut_ref[...]                  # (bq, M*K)
+    codes = c_ref[...]                  # (bn, M) int32
+    kcols = jax.lax.broadcasted_iota(jnp.int32, (1, ksub), 1)
+    acc = jnp.zeros((lut.shape[0], bn), jnp.float32)
+    for mm in range(m):                 # static unroll: M is small (<= 32)
+        oh = (codes[:, mm:mm + 1] == kcols).astype(jnp.float32)   # (bn, K)
+        acc = acc + jax.lax.dot_general(
+            lut[:, mm * ksub:(mm + 1) * ksub], oh,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)                   # MXU
+
+    mask = _eval_program_tile(valid_ref[...], imask_ref[...], flo_ref[...],
+                              fhi_ref[...], ai_ref[...], af_ref[...])
+    ok = mask & (n_ref[...] < BIG)[None, :]   # padded rows carry BIG norms
+    dist = jnp.minimum(jnp.where(ok, acc, BIG), BIG)
+
+    ids = (j * bn + jnp.arange(bn, dtype=jnp.int32))[None, :]
+    ids = jnp.broadcast_to(ids, dist.shape)
+
+    bd, bi = _topk_merge(bd_ref[...], bi_ref[...], dist, ids, r)
+    bd_ref[...] = bd
+    bi_ref[...] = bi
+    od_ref[...] = bd
+    oi_ref[...] = bi
+
+
+def pq_adc_pallas(luts, codes, norms, ints, floats, programs, *, r: int,
+                  block_q: int, block_n: int, interpret: bool):
+    """Launch the kernel.  All shapes must already be padded to block
+    multiples (ops.py does this).  luts (B, M*K) flattened;
+    returns (adc_d2 (B, R), ids (B, R))."""
+    b, mk = luts.shape
+    n, m = codes.shape
+    ksub = mk // m
+    bq, bn = block_q, block_n
+    assert b % bq == 0 and n % bn == 0
+    w = programs["valid"].shape[1]
+    mi = ints.shape[1]
+    mf = floats.shape[1]
+    grid = (b // bq, n // bn)
+
+    kern = functools.partial(_kernel, r=r, bn=bn, m=m, ksub=ksub)
+    out_d, out_i = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, mk), lambda i, j: (i, 0)),         # LUTs
+            pl.BlockSpec((bn, m), lambda i, j: (j, 0)),          # codes
+            pl.BlockSpec((bn,), lambda i, j: (j,)),              # norms
+            pl.BlockSpec((bn, mi), lambda i, j: (j, 0)),         # attrs int
+            pl.BlockSpec((bn, mf), lambda i, j: (j, 0)),         # attrs float
+            pl.BlockSpec((bq, w), lambda i, j: (i, 0)),          # valid
+            pl.BlockSpec((bq, w, mi), lambda i, j: (i, 0, 0)),   # imask
+            pl.BlockSpec((bq, w, mf), lambda i, j: (i, 0, 0)),   # flo
+            pl.BlockSpec((bq, w, mf), lambda i, j: (i, 0, 0)),   # fhi
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, r), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r), jnp.float32),
+            jax.ShapeDtypeStruct((b, r), jnp.int32),
+        ],
+        scratch_shapes=[
+            # running top-R state lives in VMEM across the sequential n-axis
+            pltpu.VMEM((bq, r), jnp.float32),
+            pltpu.VMEM((bq, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(luts, codes, norms, ints, floats, programs["valid"],
+      programs["imask"], programs["flo"], programs["fhi"])
+    return out_d, out_i

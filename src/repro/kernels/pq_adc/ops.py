@@ -1,0 +1,56 @@
+"""Public jit'd wrapper for the pq_adc kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import default_interpret
+from ..filtered_topk.ops import _pad_rows
+from .kernel import BIG, pq_adc_pallas
+
+
+@partial(jax.jit, static_argnames=("r", "block_q", "block_n", "interpret"))
+def pq_adc_topr(codes, norms, ints, floats, luts, programs, *,
+                r: int = 40, block_q: int = 128, block_n: int = 512,
+                interpret: bool | None = None):
+    """Fused compressed filtered top-R candidate scan (Pallas).
+
+    codes (N, M) uint8/int32; norms (N,) float32 (+inf/BIG rows are treated
+    as padding); luts (B, M, K) from quant.adc.build_luts; programs batched
+    filter programs.  Returns (ids (B, R) int32 with -1 for missing,
+    adc_d2 (B, R) f32 with +inf for missing) -- ADC distances are squared
+    and approximate; callers re-rank exactly (quant/adc.py).
+    """
+    b, m, ksub = luts.shape
+    n = codes.shape[0]
+    bq = min(block_q, max(8, b))
+    bn = min(block_n, max(32, n))
+
+    # pad DB rows: BIG norms mark padded rows, any code word is fine
+    n_pad = ((n + bn - 1) // bn) * bn
+    codes = _pad_rows(codes.astype(jnp.int32), n_pad, 0)
+    norms = _pad_rows(jnp.minimum(norms, BIG), n_pad, BIG)
+    ints = _pad_rows(ints, n_pad, 0)
+    floats = _pad_rows(floats, n_pad, jnp.nan)
+
+    # pad query rows
+    b_pad = ((b + bq - 1) // bq) * bq
+    luts_p = _pad_rows(luts.reshape(b, m * ksub), b_pad, 0)
+    programs_p = {
+        "valid": _pad_rows(programs["valid"], b_pad, 0),
+        "imask": _pad_rows(programs["imask"], b_pad, 0),
+        "flo": _pad_rows(programs["flo"], b_pad, jnp.inf),
+        "fhi": _pad_rows(programs["fhi"], b_pad, -jnp.inf),
+    }
+
+    if interpret is None:
+        interpret = default_interpret()
+    out_d, out_i = pq_adc_pallas(
+        luts_p, codes, norms, ints, floats, programs_p,
+        r=r, block_q=bq, block_n=bn, interpret=interpret)
+    out_d, out_i = out_d[:b], out_i[:b]
+    missing = out_d >= BIG
+    return (jnp.where(missing, -1, out_i),
+            jnp.where(missing, jnp.inf, out_d))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the pq_adc kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import filters as F
+
+BIG = 3.0e38
+
+
+def pq_adc_topr_ref(luts, codes, norms, ints, floats, programs, *, r: int):
+    """Dense (B, N) ADC matrix + filter program + top-R via argsort.
+
+    Same semantics as the kernel: ADC distance is the sum over subspaces of
+    the per-centroid LUT entries; failing and padded (norm >= BIG) rows go
+    to BIG.  Returns (adc_d2 (B, R), ids (B, R) int32)."""
+    idx = codes.astype(jnp.int32)[None, :, :, None]          # (1, N, M, 1)
+    g = jnp.take_along_axis(luts[:, None, :, :], idx, axis=3)
+    adc = jnp.sum(g[..., 0], axis=-1)                        # (B, N)
+    mask = F.eval_program_batched(programs, ints, floats, xp=jnp)
+    ok = mask & (norms < BIG)[None, :]
+    adc = jnp.minimum(jnp.where(ok, adc, BIG), BIG)
+    order = jnp.argsort(adc, axis=1)[:, :r]
+    return (jnp.take_along_axis(adc, order, axis=1),
+            order.astype(jnp.int32))

@@ -48,11 +48,13 @@ class ServeEngine:
     search calls for distributed.make_serve_fns; same control flow)."""
 
     def __init__(self, index: FavorIndex, k: int = 10, ef: int = 100,
-                 max_batch: int = 256, max_wait_ms: float = 2.0):
+                 max_batch: int = 256, max_wait_ms: float = 2.0,
+                 use_pq: bool = False):
         self.index = index
         self.k, self.ef = k, ef
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
+        self.use_pq = use_pq
         self.queue: list[Request] = []
         self.stats = {"graph": 0, "brute": 0, "batches": 0}
         self.latencies: list[float] = []
@@ -69,9 +71,20 @@ class ServeEngine:
         batch, self.queue = self.queue[:take], self.queue[take:]
         return batch
 
-    def step(self) -> list[Response]:
-        """Drain one batch; returns completed responses."""
+    def _due(self) -> bool:
+        """A batch is due when it is full or the oldest request has waited
+        past the max_wait_ms deadline (latency/throughput trade-off knob)."""
         if not self.queue:
+            return False
+        if len(self.queue) >= self.max_batch:
+            return True
+        return time.perf_counter() - self.queue[0].t_submit >= self.max_wait_s
+
+    def step(self, force: bool = False) -> list[Response]:
+        """Drain one batch if it is due (or ``force``); returns completed
+        responses ([] when the engine decided to keep waiting for more
+        requests to fill the batch)."""
+        if not self.queue or not (force or self._due()):
             return []
         batch = self._assemble()
         self.stats["batches"] += 1
@@ -83,7 +96,8 @@ class ServeEngine:
             queries = np.concatenate(
                 [queries, np.repeat(queries[-1:], b - len(batch), 0)])
             flts = flts + [flts[-1]] * (b - len(batch))
-        res = self.index.search(queries, flts, k=self.k, ef=self.ef)
+        res = self.index.search(queries, flts, k=self.k, ef=self.ef,
+                                use_pq=self.use_pq)
         t_done = time.perf_counter()
         out = []
         for i, r in enumerate(batch):
@@ -96,9 +110,16 @@ class ServeEngine:
         return out
 
     def run(self, until_empty: bool = True) -> list[Response]:
+        """until_empty=True drains the whole queue (forcing partial final
+        batches); until_empty=False processes only batches that are already
+        due and leaves the rest waiting for the deadline."""
         out = []
-        while self.queue:
-            out.extend(self.step())
+        if until_empty:
+            while self.queue:
+                out.extend(self.step(force=True))
+        else:
+            while self._due():
+                out.extend(self.step())
         return out
 
     def latency_percentiles(self) -> dict:

@@ -1,6 +1,9 @@
 """Filter algebra + DNF compiler: unit and property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import filters as F

@@ -1,6 +1,9 @@
 """Selectivity estimator (Eq. 1) + exclusion distance (Eq. 5/13/14)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import exclusion

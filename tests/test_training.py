@@ -143,3 +143,36 @@ def test_serve_engine(small_index, small_dataset):
     assert eng.stats["graph"] + eng.stats["brute"] == 40
     pct = eng.latency_percentiles()
     assert pct["p50"] <= pct["p99"]
+
+
+def test_serve_engine_deadline(small_index, small_dataset):
+    """max_wait_ms is honored: a partial batch waits for the deadline, a full
+    batch flushes immediately, and run(until_empty=) is wired."""
+    vecs, attrs, schema = small_dataset
+    eng = ServeEngine(small_index, k=5, ef=48, max_batch=8, max_wait_ms=1e6)
+    flts = list(paper_filters(schema).values())
+    rng = np.random.default_rng(1)
+
+    def submit(n):
+        for i in range(n):
+            q = rng.normal(size=(vecs.shape[1],)).astype(np.float32)
+            eng.submit(q, flts[i % len(flts)])
+
+    # partial batch, deadline far in the future -> engine keeps waiting
+    submit(3)
+    assert eng.step() == []
+    assert eng.run(until_empty=False) == []
+    assert len(eng.queue) == 3
+
+    # oldest request past the deadline -> the partial batch flushes
+    eng.queue[0].t_submit -= 2 * eng.max_wait_s
+    out = eng.step()
+    assert len(out) == 3 and not eng.queue
+
+    # full batch flushes immediately despite the huge deadline
+    submit(8)
+    assert len(eng.step()) == 8
+
+    # run() (until_empty=True) forces out partial batches
+    submit(3)
+    assert len(eng.run()) == 3 and not eng.queue
