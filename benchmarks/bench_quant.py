@@ -28,10 +28,14 @@ def run(quick: bool = False) -> str:
     # rescaled to the (smaller) bench dim; rerank=8 holds Recall@10 within
     # ~0.5pt of float32 even at 50% selectivity while the re-rank touches
     # only 80 full-precision rows per query
+    from dataclasses import replace
+
     from repro.configs.favor_anns import FavorServeConfig
     qcfg = FavorServeConfig(pq_m=max(4, vecs.shape[1] // 4), rerank=8)
-    fi = FavorIndex(base.index, attrs, **qcfg.quant_kwargs(),
-                    pq_train_iters=10 if quick else 20)
+    spec = qcfg.build_spec()
+    spec = replace(spec, quant=replace(spec.quant,
+                                       train_iters=10 if quick else 20))
+    fi = FavorIndex(base.index, attrs, spec)
     bpv_f32 = fi.bytes_per_vector()
     bpv_pq = fi.bytes_per_vector(quantized=True)
 

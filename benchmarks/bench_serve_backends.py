@@ -1,0 +1,101 @@
+"""ServeEngine throughput/latency over the pluggable execution backends.
+
+One unmodified ServeEngine drives four configurations -- LocalBackend and
+ShardedBackend, each in float32 and PQ-compressed brute-scan mode -- over the
+same mixed-selectivity workload (reduced favor-anns config).  Reports QPS,
+p50/p99 latency and the bytes-per-vector accounting that verifies the brute
+route actually streams codes (not float32) when a QuantSpec is set:
+scan_bytes = N * bytes_per_vector is the per-query bandwidth bound.
+
+The model axis spans every visible device (1 on the CI CPU; S-way sharded
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=S``).
+
+    PYTHONPATH=src python -m benchmarks.run --only serve_backends [--quick]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.favor_anns import FavorServeConfig
+from repro.core import FavorIndex, HnswParams, LocalBackend, ShardedBackend
+from repro.core import filters as F
+from repro.core.distributed import largest_divisor
+from repro.data import synthetic
+from repro.serving import ServeEngine
+
+from .common import DIM, N, NQ, SEED, Csv
+
+
+def _workload(schema, dim, n_requests, seed=0):
+    rng = np.random.default_rng(seed)
+    flts = list(F.paper_filters(schema).values()) + [
+        F.And(F.Equality("i0", int(v)), F.Range("f0", lo, lo + 8.0))
+        for v, lo in zip(rng.integers(0, 10, 4), rng.uniform(0, 90, 4))
+    ]
+    qs = synthetic.make_queries(n_requests, dim, dataset_seed=SEED,
+                                seed=seed + 101)
+    return [(qs[i], flts[int(rng.integers(0, len(flts)))])
+            for i in range(n_requests)]
+
+
+def _drive(backend, opts, requests, max_batch=128):
+    eng = ServeEngine(backend, opts, max_batch=max_batch)
+    for q, flt in requests:
+        eng.submit(q, flt)
+    eng.run()          # warm-up: compiles every (route, bucket) executable
+    eng.latencies.clear()
+    eng.stats = {"graph": 0, "brute": 0, "batches": 0}
+    for q, flt in requests:
+        eng.submit(q, flt)
+    t0 = time.perf_counter()
+    out = eng.run()
+    wall = time.perf_counter() - t0
+    pct = eng.latency_percentiles()
+    return (len(out) / max(wall, 1e-12), pct.get("p50", 0.0),
+            pct.get("p99", 0.0), eng.stats)
+
+
+def run(quick: bool = False) -> str:
+    n, dim = (4096, DIM) if quick else (max(4096, N // 2), DIM)
+    n_requests = 64 if quick else min(256, NQ * 2)
+    vecs, attrs, schema = synthetic.make_paper_dataset(n, dim, seed=SEED)
+    requests = _workload(schema, dim, n_requests, seed=3)
+
+    qcfg = FavorServeConfig(pq_m=max(4, dim // 4), rerank=8)
+    spec = qcfg.build_spec(hnsw=HnswParams(M=12, efc=60, seed=SEED))
+    opts_f32 = qcfg.search_options(k=10, ef=64, use_pq=False)
+    opts_pq = qcfg.search_options(k=10, ef=64, use_pq=True)
+
+    local = LocalBackend(FavorIndex.build(vecs, attrs, spec=spec))
+    n_model = largest_divisor(n, len(jax.devices()))
+    mesh = jax.make_mesh((1, n_model), ("data", "model"))
+    shard = ShardedBackend.build(vecs, attrs, mesh, spec,
+                                 codebook=local.index.codebook, seed=SEED)
+
+    bpv_f32 = local.index.bytes_per_vector()
+    bpv_pq = local.index.bytes_per_vector(quantized=True)
+    grid = [("local", local, opts_f32, bpv_f32),
+            ("local", local, opts_pq, bpv_pq),
+            ("sharded", shard, opts_f32, bpv_f32),
+            ("sharded", shard, opts_pq, bpv_pq)]
+
+    csv = Csv("serve_backends.csv",
+              ["backend", "shards", "use_pq", "qps", "p50_ms", "p99_ms",
+               "graph", "brute", "bytes_per_vector", "scan_bytes"])
+    summary = []
+    for name, backend, opts, bpv in grid:
+        qps, p50, p99, stats = _drive(backend, opts, requests)
+        shards = n_model if name == "sharded" else 1
+        csv.add(name, shards, int(opts.use_pq), qps, p50, p99,
+                stats["graph"], stats["brute"], float(bpv), float(bpv * n))
+        summary.append(f"{name}{'_pq' if opts.use_pq else '_f32'}={qps:.0f}")
+    path = csv.write()
+    return (f"shards={n_model} compression={bpv_f32 / bpv_pq:.1f}x "
+            + " ".join(summary) + f" csv={path}")
+
+
+if __name__ == "__main__":
+    print(run(quick=True))

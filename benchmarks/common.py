@@ -67,10 +67,12 @@ def mean_recall(ids_batch, truth, k: int = 10) -> float:
 
 def timed_search(fi: FavorIndex, queries, flt, *, k=10, ef=64, repeats=3, **kw):
     """Returns (result, best qps) -- warm (post-compile) timing."""
-    res = fi.search(queries, flt, k=k, ef=ef, **kw)  # warm-up/compile
+    from repro.core import SearchOptions
+    opts = SearchOptions(k=k, ef=ef, **kw)
+    res = fi.query(queries, flt, opts)  # warm-up/compile
     best = 0.0
     for _ in range(repeats):
-        res = fi.search(queries, flt, k=k, ef=ef, **kw)
+        res = fi.query(queries, flt, opts)
         best = max(best, res.qps)
     return res, best
 

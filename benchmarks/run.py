@@ -19,11 +19,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_ablation, bench_qps_recall, bench_quant,
-                   bench_selectivity, bench_verification)
+                   bench_selectivity, bench_serve_backends,
+                   bench_verification)
 
     benches = [
         ("qps_recall_figs4_5_8_9", bench_qps_recall.run),
         ("quant_pq_adc", bench_quant.run),
+        ("serve_backends", bench_serve_backends.run),
         ("selectivity_fig7", bench_selectivity.run),
         ("exclusion_ablation_fig10", bench_ablation.run_exclusion),
         ("termination_fig11", bench_ablation.run_termination),

@@ -1,10 +1,15 @@
 """Quickstart: build a FAVOR index and run hybrid vector+attribute queries.
 
+Uses the typed API: construction is configured by a frozen ``BuildSpec``,
+each search batch by a frozen ``SearchOptions`` (the legacy
+``fi.search(k=, ef=, ...)`` kwargs still work but are deprecated).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import FavorIndex, HnswParams, paper_filters
+from repro.core import (BuildSpec, FavorIndex, HnswParams, SearchOptions,
+                        paper_filters)
 from repro.core import filters as F
 from repro.core import refimpl
 from repro.data import synthetic
@@ -14,13 +19,15 @@ def main():
     n, dim, nq = 8000, 32, 64
     print(f"building FAVOR index: {n} vectors x {dim} dims ...")
     vecs, attrs, schema = synthetic.make_paper_dataset(n, dim, seed=0)
-    fi = FavorIndex.build(vecs, attrs, HnswParams(M=12, efc=60, seed=0))
+    fi = FavorIndex.build(vecs, attrs,
+                          spec=BuildSpec(hnsw=HnswParams(M=12, efc=60, seed=0)))
     print(f"  built in {fi.build_seconds:.1f}s  Delta_d={fi.delta_d:.4f} "
           f"(Eq. 5, recorded offline)")
 
     queries = synthetic.make_queries(nq, dim)
+    opts = SearchOptions(k=10, ef=96)
     for name, flt in paper_filters(schema).items():
-        res = fi.search(queries, flt, k=10, ef=96)
+        res = fi.query(queries, flt, opts)
         mask = F.eval_program(F.compile_filter(flt, schema), attrs.ints,
                               attrs.floats)
         truth = [refimpl.bruteforce_filtered(vecs, mask, q, 10)[0]
@@ -34,7 +41,7 @@ def main():
 
     # custom composite filter (Logic: AND of int equality and float range)
     custom = F.And(F.Equality("i0", 3), F.Range("f0", 20.0, 70.0))
-    res = fi.search(queries[:8], custom, k=5, ef=96)
+    res = fi.query(queries[:8], custom, SearchOptions(k=5, ef=96))
     print("\ncustom filter results (ids):")
     print(res.ids)
 

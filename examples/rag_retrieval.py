@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_spec
-from repro.core import (ColumnSpec, FavorIndex, HnswParams, Schema)
+from repro.core import (ColumnSpec, FavorIndex, HnswParams, Schema,
+                        SearchOptions)
 from repro.core import filters as F
 from repro.core.filters import AttributeTable
 from repro.data import synthetic
@@ -58,7 +59,7 @@ def main():
                                        jnp.asarray(qbatch["tokens"][:8])))
     flt = F.And(F.Inclusion("source", [1, 3]),       # trusted sources only
                 F.Range("age_days", None, 90.0))     # fresh (< 90 days)
-    res = fi.search(q_embs, flt, k=5, ef=64)
+    res = fi.query(q_embs, flt, SearchOptions(k=5, ef=64))
     print(f"p_hat={res.p_hat[0]:.3f} route="
           f"{'brute' if res.routed_brute[0] else 'graph'}")
     for i in range(4):

@@ -14,8 +14,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FavorIndex, HnswParams, compile_filter, paper_schema,
-                        stack_programs)
+from repro.core import (FavorIndex, HnswParams, SearchOptions,
+                        compile_filter, paper_schema, stack_programs)
 from repro.core import filters as F
 from repro.core import random_attributes
 from repro.models.recsys import retrieval_topk_filtered
@@ -56,7 +56,7 @@ def main():
     fi = FavorIndex.build(items_n, attrs, HnswParams(M=12, efc=60, seed=2))
     users_n = users / np.linalg.norm(users, axis=1, keepdims=True)
     # at p ~= 10% the result pool must reach ~k/p neighbors: ef >> 2k
-    res = fi.search(users_n, flt, k=k, ef=8 * k)
+    res = fi.query(users_n, flt, SearchOptions(k=k, ef=8 * k))
     overlap = []
     # cosine ground truth under the same filter
     from repro.core import refimpl

@@ -6,46 +6,47 @@ engine; the selectivity-driven selector routes each to PreFBF or the
 exclusion-distance graph search.  Reports routing statistics, recall and
 latency percentiles.
 
+One unmodified ServeEngine drives any execution backend: here the single-host
+LocalBackend and (on the same device inventory) the sharded serve path via
+ShardedBackend -- run with XLA_FLAGS=--xla_force_host_platform_device_count=S
+to actually spread the DB over S shards.
+
     PYTHONPATH=src python examples/serve_anns.py
 """
 import numpy as np
 
-from repro.core import FavorIndex, HnswParams, paper_filters
+import jax
+
+from repro.core import (BuildSpec, FavorIndex, HnswParams, LocalBackend,
+                        SearchOptions, ShardedBackend, paper_filters)
 from repro.core import filters as F
 from repro.core import refimpl
 from repro.data import synthetic
 from repro.serving import ServeEngine
 
 
-def main():
-    n, dim = 10000, 32
-    print(f"building index ({n} x {dim}) ...")
-    vecs, attrs, schema = synthetic.make_paper_dataset(n, dim, seed=1)
-    fi = FavorIndex.build(vecs, attrs, HnswParams(M=12, efc=60, seed=1))
-    eng = ServeEngine(fi, k=10, ef=96, max_batch=64)
-
-    rng = np.random.default_rng(0)
-    base = paper_filters(schema)
-    workload = list(base.values()) + [
-        F.And(F.Equality("i0", int(v)), F.Range("f0", lo, lo + 8.0))  # ~0.8%
-        for v, lo in zip(rng.integers(0, 10, 4), rng.uniform(0, 90, 4))
-    ]
-    n_requests = 512
-    print(f"submitting {n_requests} requests with {len(workload)} filter kinds ...")
+def drive(eng, workload, dim, n_requests=512, seed=0):
+    rng = np.random.default_rng(seed)
     reqs = {}
     for i in range(n_requests):
         q = synthetic.make_queries(1, dim, seed=200 + i)[0]
         flt = workload[int(rng.integers(0, len(workload)))]
         rid = eng.submit(q, flt)
         reqs[rid] = (q, flt)
-
     responses = eng.run()
-    print(f"done: {len(responses)} responses in {eng.stats['batches']} batches")
-    print(f"routing: graph={eng.stats['graph']} brute={eng.stats['brute']}")
-    pct = eng.latency_percentiles()
-    print("latency ms: " + "  ".join(f"{k}={v:.1f}" for k, v in pct.items()))
+    return responses, reqs
 
-    # verify a sample against ground truth
+
+def report(tag, eng, responses, reqs, vecs, attrs, schema, seed=0):
+    print(f"[{tag}] done: {len(responses)} responses in "
+          f"{eng.stats['batches']} batches")
+    print(f"[{tag}] routing: graph={eng.stats['graph']} "
+          f"brute={eng.stats['brute']}")
+    pct = eng.latency_percentiles()
+    print(f"[{tag}] latency ms: "
+          + "  ".join(f"{k}={v:.1f}" for k, v in pct.items()))
+
+    rng = np.random.default_rng(seed)
     sample = rng.choice(len(responses), 32, replace=False)
     recs = []
     for si in sample:
@@ -55,7 +56,40 @@ def main():
                               attrs.floats)
         truth, _ = refimpl.bruteforce_filtered(vecs, mask, q, 10)
         recs.append(refimpl.recall_at_k(r.ids[r.ids >= 0], truth, 10))
-    print(f"sampled recall@10 = {np.mean(recs):.3f}")
+    print(f"[{tag}] sampled recall@10 = {np.mean(recs):.3f}")
+
+
+def main():
+    n, dim = 10000, 32
+    print(f"building index ({n} x {dim}) ...")
+    vecs, attrs, schema = synthetic.make_paper_dataset(n, dim, seed=1)
+    spec = BuildSpec(hnsw=HnswParams(M=12, efc=60, seed=1))
+    opts = SearchOptions(k=10, ef=96)
+
+    rng = np.random.default_rng(0)
+    base = paper_filters(schema)
+    workload = list(base.values()) + [
+        F.And(F.Equality("i0", int(v)), F.Range("f0", lo, lo + 8.0))  # ~0.8%
+        for v, lo in zip(rng.integers(0, 10, 4), rng.uniform(0, 90, 4))
+    ]
+    print(f"serving 512 requests with {len(workload)} filter kinds ...")
+
+    # -- single-host backend -------------------------------------------------
+    local = LocalBackend(FavorIndex.build(vecs, attrs, spec=spec))
+    eng = ServeEngine(local, opts, max_batch=64)
+    responses, reqs = drive(eng, workload, dim)
+    report("local", eng, responses, reqs, vecs, attrs, schema)
+
+    # -- sharded backend (same engine, same options) -------------------------
+    from repro.core.distributed import largest_divisor
+    n_model = largest_divisor(n, len(jax.devices()))
+    mesh = jax.make_mesh((1, n_model), ("data", "model"))
+    print(f"sharding DB {n_model}-way on the model axis ...")
+    shard = ShardedBackend.build(vecs, attrs, mesh, spec, seed=1)
+    eng = ServeEngine(shard, opts, max_batch=64)
+    responses, reqs = drive(eng, workload, dim, seed=1)
+    report(f"sharded x{n_model}", eng, responses, reqs, vecs, attrs, schema,
+           seed=1)
 
 
 if __name__ == "__main__":

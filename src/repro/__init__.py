@@ -3,4 +3,4 @@
 NOTE: this module must stay import-light (no jax import here) so that
 launch/dryrun.py can set XLA_FLAGS before jax initializes.
 """
-__version__ = "1.0.0"
+__version__ = "1.1.0"

@@ -22,16 +22,43 @@ class FavorServeConfig:
     width: int = 8
     batch: int = 1024
     # compressed brute path (quant subsystem): 32 x uint8 PQ codes per
-    # 128-dim vector = 16x fewer bytes streamed by the PreFBF scan.
-    # Consumed by FavorIndex via quant_kwargs(); the sharded serve path
-    # (distributed.make_serve_fns) still streams float32 -- ROADMAP item.
+    # 128-dim vector = 16x fewer bytes streamed by the PreFBF scan, on both
+    # the local backend and the sharded serve path (codes sharded on "model",
+    # per-shard ADC scan + exact re-rank before the top-k merge).
     quantize: str | None = "pq"
     pq_m: int = 32
     pq_nbits: int = 8
     rerank: int = 8
 
+    def quant_spec(self):
+        """QuantSpec realizing this config's compressed memory format."""
+        if self.quantize is None:
+            return None
+        from ..core.options import QuantSpec
+        return QuantSpec(kind=self.quantize, m=self.pq_m, nbits=self.pq_nbits,
+                         rerank=self.rerank)
+
+    def build_spec(self, hnsw=None, quant="config", **overrides):
+        """BuildSpec for FavorIndex.build / ShardedBackend.build; pass
+        quant=None (or a QuantSpec) to override this config's format."""
+        from ..core.options import BuildSpec
+        if quant == "config":
+            quant = self.quant_spec()
+        return BuildSpec(hnsw=hnsw, quant=quant, **overrides)
+
+    def search_options(self, **overrides):
+        """SearchOptions matching this config's serve shape."""
+        from ..core.options import SearchOptions
+        kw = {"k": self.k, "ef": self.ef, "use_pq": self.quantize is not None}
+        kw.update(overrides)
+        return SearchOptions(**kw)
+
     def quant_kwargs(self) -> dict:
-        """FavorIndex(**...) kwargs realizing this config's memory format."""
+        """Deprecated: legacy FavorIndex(**kwargs) blob; use build_spec()."""
+        import warnings
+        warnings.warn("FavorServeConfig.quant_kwargs() is deprecated; use "
+                      "build_spec()/quant_spec()", DeprecationWarning,
+                      stacklevel=2)
         if self.quantize is None:
             return {}
         return {"quantize": self.quantize, "pq_m": self.pq_m,

@@ -1,0 +1,286 @@
+"""Pluggable execution backends behind the unified search API.
+
+``router.execute`` owns the host-side pipeline (compile -> estimate -> route
+-> partition); a ``Backend`` owns the device-side execution of each route.
+The protocol is the paper's Figure-1 seam:
+
+    estimate(programs)                      -> (B,) selectivity p_hat
+    search_graph(queries, programs, p_hat, opts) -> {"ids","dists",...}
+    search_brute(queries, programs, opts)        -> (ids, dists)
+
+Two implementations ship here:
+
+  LocalBackend   -- single-host, extracted from the seed ``FavorIndex.search``
+                    body: per-route jitted executables, PQ/SQ ADC brute scan.
+  ShardedBackend -- multi-device serve path over ``distributed.make_serve_fns``
+                    (DB sharded on "model", queries on "data"), including the
+                    sharded compressed brute route: PQ codes are co-sharded
+                    with their vectors and each shard runs the ADC LUT scan +
+                    exact re-rank before the cross-shard top-k merge.
+
+Both expose ``schema`` / ``sel_cfg`` so the router takes identical routing
+decisions regardless of where execution lands, and ``validate(opts)`` so
+option/state mismatches (e.g. ``use_pq`` without a codebook) fail before any
+device work.  Future backends (caching, async, remote) implement the same
+three methods and plug into ``ServeEngine`` unchanged.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import distributed as dist
+from . import exclusion
+from . import filters as F
+from . import prefbf, selector
+from .options import BuildSpec, SearchOptions
+from .search import favor_graph_search
+
+if TYPE_CHECKING:
+    from .favor import FavorIndex
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Execution backend contract consumed by router.execute / ServeEngine."""
+
+    schema: F.Schema
+    sel_cfg: selector.SelectorConfig
+
+    def validate(self, opts: SearchOptions) -> None:
+        """Raise ValueError when ``opts`` cannot run on this backend."""
+        ...
+
+    def estimate(self, programs: dict):
+        """(B,) estimated selectivity over the backend's sample."""
+        ...
+
+    def search_graph(self, queries, programs: dict, p_hat,
+                     opts: SearchOptions) -> dict:
+        """Exclusion-distance graph route; returns at least ids/dists."""
+        ...
+
+    def search_brute(self, queries, programs: dict, opts: SearchOptions):
+        """PreFBF brute route (float32 or compressed); returns (ids, dists)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Local (single-host) backend
+# ---------------------------------------------------------------------------
+class LocalBackend:
+    """Single-host execution over a built FavorIndex's device arrays."""
+
+    def __init__(self, index: "FavorIndex"):
+        self.index = index
+
+    @property
+    def schema(self) -> F.Schema:
+        return self.index.schema
+
+    @property
+    def sel_cfg(self) -> selector.SelectorConfig:
+        return self.index.sel_cfg
+
+    def validate(self, opts: SearchOptions) -> None:
+        if opts.use_pq and self.index.codebook is None:
+            raise ValueError("use_pq=True needs an index built with "
+                             "quantize='pq' or 'sq' (BuildSpec.quant)")
+
+    def estimate(self, programs: dict):
+        return selector.estimate_batched(programs, self.index.sample_ints,
+                                         self.index.sample_floats)
+
+    def search_graph(self, queries, programs: dict, p_hat,
+                     opts: SearchOptions) -> dict:
+        idx = self.index
+        cfg = opts.search_config()
+        D = exclusion.exclusion_distance(
+            jnp.asarray(p_hat), opts.ef, idx.delta_d, k=opts.k,
+            p_min=idx.sel_cfg.p_min, xp=jnp)
+        return favor_graph_search(idx.g, queries, programs, D, cfg)
+
+    def search_brute(self, queries, programs: dict, opts: SearchOptions):
+        idx = self.index
+        pv, pn, pi, pf = idx._pf
+        if not opts.use_pq:
+            return prefbf.prefbf_topk(pv, pn, pi, pf, queries, programs,
+                                      k=opts.k, chunk=idx.prefbf_chunk,
+                                      use_pallas=opts.use_pallas)
+        from ..quant import adc as quant_adc
+        rr = opts.rerank if opts.rerank is not None else idx.rerank
+        if idx.quantize == "pq":
+            return quant_adc.pq_prefbf_topk(
+                idx._codes, pn, pi, pf, queries, programs, idx._cb_dev[0],
+                pv, k=opts.k, rerank=rr, chunk=idx.prefbf_chunk,
+                use_pallas=opts.use_pallas)
+        return quant_adc.sq_prefbf_topk(
+            idx._codes, idx._cb_dev[0], idx._cb_dev[1], pn, pi, pf,
+            queries, programs, pv, k=opts.k, rerank=rr,
+            chunk=idx.prefbf_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Sharded (multi-device) backend
+# ---------------------------------------------------------------------------
+class ShardedBackend:
+    """Multi-device serve path: DB rows (and PQ codes) sharded on
+    ``model_axis``, query batches sharded on ``query_axes``.
+
+    Per-(k, ef, ...) serve executables are built lazily from
+    ``distributed.make_serve_fns`` and cached on the jit-static SearchConfig,
+    mirroring the per-route compiled-program reuse of the local path.
+    """
+
+    def __init__(self, mesh, sharded: dist.ShardedFavorArrays,
+                 schema: F.Schema, *, sel_cfg=None, codebook=None,
+                 rerank: int = 4, prefbf_chunk: int = 65536,
+                 query_axes=("data",), model_axis: str = "model"):
+        self.mesh = mesh
+        self.schema = schema
+        self.sel_cfg = sel_cfg or selector.SelectorConfig()
+        self.rerank = rerank
+        self.prefbf_chunk = prefbf_chunk
+        self.query_axes = tuple(query_axes)
+        self.model_axis = model_axis
+        self.codebook = codebook
+        if codebook is not None and sharded.quant is None:
+            sharded = dist.attach_quant(sharded, codebook)
+        self.sharded = sharded
+        self.quant = sharded.quant
+        self._fns_cache: dict = {}
+        self.db = dist.device_put_sharded_db(
+            sharded.arrays, mesh, dist.db_specs(model_axis, self.quant))
+        self._qmult = 1
+        for ax in self.query_axes:
+            self._qmult *= mesh.shape[ax]
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, vectors: np.ndarray, attrs: F.AttributeTable, mesh,
+              spec: BuildSpec | None = None, *, codebook=None,
+              query_axes=("data",), model_axis: str = "model",
+              seed: int = 0) -> "ShardedBackend":
+        """Build per-shard HNSWs (+ optional codebook) straight from the
+        raw vectors and attach them to ``mesh``."""
+        spec = spec or BuildSpec()
+        if spec.quant is not None and codebook is not None:
+            from .. import quant
+            q = spec.quant
+            cb_kind = ("pq" if isinstance(codebook, quant.PQCodebook)
+                       else "sq")
+            if cb_kind != q.kind:
+                raise ValueError(f"spec.quant.kind={q.kind!r} does not match "
+                                 f"the supplied {cb_kind!r} codebook")
+            if cb_kind == "pq" and (codebook.m, codebook.nbits) != (q.m, q.nbits):
+                raise ValueError(
+                    f"spec.quant geometry (m={q.m}, nbits={q.nbits}) does not "
+                    f"match the supplied codebook (m={codebook.m}, "
+                    f"nbits={codebook.nbits})")
+        n_shards = mesh.shape[model_axis]
+        sharded = dist.build_sharded(vectors, attrs, n_shards, spec.hnsw,
+                                     sample_rate=spec.selector.sample_rate,
+                                     seed=seed,
+                                     min_sample=spec.selector.min_sample,
+                                     max_sample=spec.selector.max_sample)
+        rerank = 4
+        if codebook is None and spec.quant is not None:
+            from .. import quant
+            q = spec.quant
+            if q.kind == "pq":
+                codebook = quant.train_pq(vectors, m=q.m, nbits=q.nbits,
+                                          iters=q.train_iters,
+                                          sample=q.train_sample, seed=seed)
+            else:
+                codebook = quant.train_sq(vectors)
+        if spec.quant is not None:
+            rerank = spec.quant.rerank
+        return cls(mesh, sharded, attrs.schema, sel_cfg=spec.selector,
+                   codebook=codebook, rerank=rerank,
+                   prefbf_chunk=max(spec.prefbf_chunk, 1),
+                   query_axes=query_axes, model_axis=model_axis)
+
+    # -- serve executables ----------------------------------------------------
+    def _fns(self, opts: SearchOptions, *, for_pq: bool = False) -> dict:
+        """Serve-fns set for ``opts``.  The graph/brute/estimate executables
+        depend only on the jit-static SearchConfig, so they are cached on it
+        alone (rerank pinned to the backend default); a non-default
+        ``opts.rerank`` creates an extra set whose serve_brute_pq is the only
+        member ever called -- the rerank-independent executables never
+        recompile per rerank value."""
+        rr = self.rerank
+        if for_pq and opts.rerank is not None:
+            rr = opts.rerank
+        key = (opts.search_config(), rr)
+        fns = self._fns_cache.get(key)
+        if fns is None:
+            fns = dist.make_serve_fns(
+                self.mesh, opts.search_config(), prefbf_chunk=self.prefbf_chunk,
+                query_axes=self.query_axes, model_axis=self.model_axis,
+                quant=self.quant, rerank=rr)
+            self._fns_cache[key] = fns
+        return fns
+
+    def _pad(self, queries, programs: dict):
+        """Pad the batch to a multiple of the query-axis device count (the
+        shard_map data-parallel split needs an even division)."""
+        b = int(queries.shape[0])
+        pad = (-b) % self._qmult
+        if pad:
+            queries = jnp.concatenate(
+                [queries, jnp.repeat(queries[-1:], pad, axis=0)])
+            programs = {k: jnp.concatenate(
+                [v, jnp.repeat(v[-1:], pad, axis=0)]) for k, v in
+                programs.items()}
+        return queries, programs, b
+
+    # -- Backend protocol -----------------------------------------------------
+    def validate(self, opts: SearchOptions) -> None:
+        if opts.use_pq and self.quant is None:
+            raise ValueError("use_pq=True needs a ShardedBackend built with "
+                             "quantize codes (BuildSpec.quant, codebook=, or "
+                             "attach_quant)")
+        if opts.use_pallas:
+            raise ValueError("use_pallas is not supported inside the sharded "
+                             "serve path yet; use LocalBackend")
+
+    def estimate(self, programs: dict):
+        dummy = jnp.zeros((int(next(iter(programs.values())).shape[0]), 1),
+                          jnp.float32)
+        _, programs, b = self._pad(dummy, programs)
+        # the estimate executable is SearchConfig-independent: reuse any
+        # cached serve-fns set rather than keying a fresh one on defaults
+        fns = (next(iter(self._fns_cache.values())) if self._fns_cache
+               else self._fns(SearchOptions()))
+        return fns["estimate"](self.db, programs)[:b]
+
+    def search_graph(self, queries, programs: dict, p_hat,
+                     opts: SearchOptions) -> dict:
+        queries, programs, b = self._pad(queries, programs)
+        p_hat = jnp.asarray(p_hat, jnp.float32)
+        pad = queries.shape[0] - p_hat.shape[0]
+        if pad:
+            p_hat = jnp.concatenate([p_hat, jnp.repeat(p_hat[-1:], pad)])
+        ids, dists = self._fns(opts)["serve_graph_phat"](
+            self.db, queries, programs, p_hat)
+        return {"ids": np.asarray(ids)[:b], "dists": np.asarray(dists)[:b]}
+
+    def search_brute(self, queries, programs: dict, opts: SearchOptions):
+        queries, programs, b = self._pad(queries, programs)
+        fn = "serve_brute_pq" if opts.use_pq else "serve_brute"
+        fns = self._fns(opts, for_pq=opts.use_pq)
+        ids, dists = fns[fn](self.db, queries, programs)
+        return np.asarray(ids)[:b], np.asarray(dists)[:b]
+
+    # -- accounting -----------------------------------------------------------
+    def bytes_per_vector(self, quantized: bool = False) -> int:
+        """Bytes streamed per DB row by the brute scan on each shard."""
+        if quantized:
+            if self.quant is None:
+                raise ValueError("backend has no quantize codes attached")
+            # one uint8 code per column, whether the codebook object is held
+            # here or the codes were pre-attached via attach_quant
+            return int(self.sharded.arrays["codes"].shape[1])
+        return 4 * int(self.sharded.arrays["vectors"].shape[1])

@@ -33,9 +33,44 @@ from .hnsw import HnswIndex, HnswParams, build_hnsw
 from .search import SearchConfig, favor_graph_search
 
 
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (e.g. scan chunk sizes and
+    mesh-axis extents that must evenly split a row count)."""
+    d = max(1, min(cap, n))
+    while n % d:
+        d -= 1
+    return d
+
+
 # ---------------------------------------------------------------------------
 # Sharded index container
 # ---------------------------------------------------------------------------
+def db_specs(model_axis: str = "model", quant: str | None = None) -> dict:
+    """Partition specs for the serve DB dict.
+
+    ``quant`` extends the base layout with the compressed-scan arrays:
+    "codes" rows are co-sharded with their vectors on ``model_axis``; the
+    (tiny) codebook tables are replicated on every device.
+    """
+    sh = {
+        "vectors": P(model_axis, None), "norms": P(model_axis),
+        "neighbors0": P(model_axis, None), "upper": P(None, model_axis, None),
+        "attrs_int": P(model_axis, None), "attrs_float": P(model_axis, None),
+        "entry": P(model_axis), "delta_d": P(model_axis),
+        "sample_int": P(model_axis, None), "sample_float": P(model_axis, None),
+    }
+    if quant is not None:
+        sh["codes"] = P(model_axis, None)
+        if quant == "pq":
+            sh["centroids"] = P(None, None, None)
+        elif quant == "sq":
+            sh["sq_lo"] = P(None)
+            sh["sq_scale"] = P(None)
+        else:
+            raise ValueError(f"quant must be 'pq', 'sq' or None, got {quant!r}")
+    return sh
+
+
 @dataclass
 class ShardedFavorArrays:
     """Global-shaped arrays; axis 0 of every DB array is sharded on "model".
@@ -45,27 +80,49 @@ class ShardedFavorArrays:
     attrs_int   (S*Ns, m_i)    attrs_float(S*Ns, m_f)
     entry       (S,) int32     delta_d    (S,) f32
     sample_int  (S*ns, m_i)    sample_float (S*ns, m_f)
+
+    With a codebook attached (attach_quant): codes (S*Ns, M) uint8 plus the
+    replicated codebook tables (centroids | sq_lo/sq_scale).
     """
     arrays: dict
     n_shards: int
     shard_rows: int
     sample_rows: int  # per shard
+    quant: str | None = None  # "pq" | "sq" once attach_quant has run
 
     def specs(self) -> dict:
-        sh = {
-            "vectors": P("model", None), "norms": P("model"),
-            "neighbors0": P("model", None), "upper": P(None, "model", None),
-            "attrs_int": P("model", None), "attrs_float": P("model", None),
-            "entry": P("model"), "delta_d": P("model"),
-            "sample_int": P("model", None), "sample_float": P("model", None),
-        }
-        return sh
+        return db_specs(quant=self.quant)
+
+
+def attach_quant(sharded: ShardedFavorArrays, codebook) -> ShardedFavorArrays:
+    """Encode the sharded DB under ``codebook`` so the brute route can
+    stream codes instead of float32 rows.  Row i's code lands on the same
+    shard as vector i (contiguous row partition on "model")."""
+    from .. import quant
+    arrays = dict(sharded.arrays)
+    arrays["codes"] = quant.encode(codebook, arrays["vectors"])
+    if isinstance(codebook, quant.PQCodebook):
+        kind = "pq"
+        arrays["centroids"] = np.asarray(codebook.centroids, np.float32)
+    else:
+        kind = "sq"
+        arrays["sq_lo"] = np.asarray(codebook.lo, np.float32)
+        arrays["sq_scale"] = np.asarray(codebook.scale, np.float32)
+    return ShardedFavorArrays(arrays, sharded.n_shards, sharded.shard_rows,
+                              sharded.sample_rows, quant=kind)
 
 
 def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
                   params: HnswParams | None = None, sample_rate: float = 0.01,
-                  seed: int = 0) -> ShardedFavorArrays:
-    """Partition rows round-robin-contiguously, build one HNSW per shard."""
+                  seed: int = 0, min_sample: int = 8,
+                  max_sample: int = 65536) -> ShardedFavorArrays:
+    """Partition rows round-robin-contiguously, build one HNSW per shard.
+
+    ``min_sample``/``max_sample`` bound the TOTAL selectivity-sample size
+    (split evenly across shards) exactly like SelectorConfig bounds the
+    single-host sample, so the psum-combined p_hat matches the single-host
+    estimator's variance and both backends take the same routes -- and the
+    per-batch jitted estimate stays O(max_sample) however large the DB."""
     n = vectors.shape[0]
     assert n % n_shards == 0, "row count must divide the model axis"
     ns = n // n_shards
@@ -80,7 +137,8 @@ def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
         parts.append((idx, sl))
         max_lup = max(max_lup, len(idx.levels) - 1)
 
-    sample_n = max(8, int(round(ns * sample_rate)))
+    sample_n = max(8, -(-min_sample // n_shards), int(round(ns * sample_rate)))
+    sample_n = min(sample_n, ns, max(8, max_sample // n_shards))
     rng = np.random.default_rng(seed + 31)
 
     neighbors0 = np.full((n, parts[0][0].params.M0), -1, np.int32)
@@ -156,28 +214,28 @@ def _merge_topk(local_d, local_i, k: int, axis: str):
 
 def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
                    prefbf_chunk: int = 65536, query_axes=("data",),
-                   model_axis: str = "model"):
+                   model_axis: str = "model", quant: str | None = None,
+                   rerank: int = 4):
     """Build the jitted sharded serve steps for ``mesh``.
 
     Returns dict with:
       estimate(db, programs)              -> (B,) p_hat (replicated)
       serve_graph(db, queries, programs)  -> ids (B,k) GLOBAL row ids, dists
       serve_brute(db, queries, programs)  -> ids (B,k), dists
+      serve_brute_pq(db, queries, programs) [quant only] -> ids, dists
+
+    With ``quant`` set ("pq"/"sq") the db dict must carry the attach_quant
+    arrays; serve_brute_pq streams only the uint8 codes per shard (ADC LUT
+    scan, same DNF masking), exact-re-ranks the top ``rerank * k`` local
+    candidates against the shard's float32 rows, and only then joins the
+    cross-shard top-k merge -- so the bandwidth-bound scan never touches
+    float32.
     """
     qspec = P(query_axes if len(query_axes) > 1 else query_axes[0], None)
     pspec_each = {"valid": P(qspec[0], None), "imask": P(qspec[0], None, None),
                   "flo": P(qspec[0], None, None), "fhi": P(qspec[0], None, None)}
     ef = ef_sel or cfg.ef
-
-    def db_specs():
-        return {
-            "vectors": P(model_axis, None), "norms": P(model_axis),
-            "neighbors0": P(model_axis, None),
-            "upper": P(None, model_axis, None),
-            "attrs_int": P(model_axis, None), "attrs_float": P(model_axis, None),
-            "entry": P(model_axis), "delta_d": P(model_axis),
-            "sample_int": P(model_axis, None), "sample_float": P(model_axis, None),
-        }
+    dspecs = db_specs(model_axis, quant)
 
     # -- selectivity estimate (psum-combined; identical on all shards) -------
     def _estimate(db, programs):
@@ -191,13 +249,12 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
 
     estimate = jax.jit(shard_map(
         _estimate, mesh=mesh,
-        in_specs=(db_specs(), pspec_each),
+        in_specs=(dspecs, pspec_each),
         out_specs=P(qspec[0]),
         check_rep=False))
 
     # -- graph route ----------------------------------------------------------
-    def _serve_graph(db, queries, programs):
-        p_hat = _estimate(db, programs)
+    def _graph_from_phat(db, queries, programs, p_hat):
         local_g = {
             "vectors": db["vectors"], "norms": db["norms"],
             "neighbors0": db["neighbors0"], "upper": db["upper"],
@@ -213,18 +270,29 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
         d, i = _merge_topk(out["dists"], gids, cfg.k, model_axis)
         return jnp.where(jnp.isfinite(d), i, -1), d
 
+    def _serve_graph(db, queries, programs):
+        return _graph_from_phat(db, queries, programs,
+                                _estimate(db, programs))
+
     serve_graph = jax.jit(shard_map(
         _serve_graph, mesh=mesh,
-        in_specs=(db_specs(), qspec, pspec_each),
+        in_specs=(dspecs, qspec, pspec_each),
+        out_specs=(qspec, qspec),
+        check_rep=False))
+
+    # same route with the selectivity estimate supplied by the caller (the
+    # router already ran it to take the routing decision -- don't pay the
+    # O(B x sample) evaluation twice per batch)
+    serve_graph_phat = jax.jit(shard_map(
+        _graph_from_phat, mesh=mesh,
+        in_specs=(dspecs, qspec, pspec_each, P(qspec[0])),
         out_specs=(qspec, qspec),
         check_rep=False))
 
     # -- brute route -----------------------------------------------------------
     def _serve_brute(db, queries, programs):
         n_local = db["vectors"].shape[0]
-        chunk = min(prefbf_chunk, n_local)
-        while n_local % chunk:  # largest divisor of the shard row count
-            chunk -= 1
+        chunk = largest_divisor(n_local, prefbf_chunk)
         ids, d = prefbf.prefbf_topk(
             db["vectors"], db["norms"], db["attrs_int"], db["attrs_float"],
             queries, programs, k=cfg.k, chunk=chunk)
@@ -235,13 +303,48 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
 
     serve_brute = jax.jit(shard_map(
         _serve_brute, mesh=mesh,
-        in_specs=(db_specs(), qspec, pspec_each),
+        in_specs=(dspecs, qspec, pspec_each),
         out_specs=(qspec, qspec),
         check_rep=False))
 
-    return {"estimate": estimate, "serve_graph": serve_graph,
-            "serve_brute": serve_brute, "db_specs": db_specs(),
-            "query_spec": qspec}
+    fns = {"estimate": estimate, "serve_graph": serve_graph,
+           "serve_graph_phat": serve_graph_phat, "serve_brute": serve_brute,
+           "db_specs": dspecs, "query_spec": qspec}
+
+    # -- compressed brute route (quant subsystem, sharded) --------------------
+    if quant is not None:
+        from ..quant import adc as quant_adc
+
+        def _serve_brute_pq(db, queries, programs):
+            """Per shard: ADC LUT scan over the local uint8 codes -> exact
+            float32 re-rank of the top rerank*k local candidates -> global
+            ids -> cross-shard top-k merge.  The O(Ns) scan reads only codes;
+            float32 rows are touched for the R re-rank candidates alone."""
+            n_local = db["norms"].shape[0]
+            chunk = largest_divisor(n_local, prefbf_chunk)
+            if quant == "pq":
+                ids, d = quant_adc.pq_prefbf_topk(
+                    db["codes"], db["norms"], db["attrs_int"],
+                    db["attrs_float"], queries, programs, db["centroids"],
+                    db["vectors"], k=cfg.k, rerank=rerank, chunk=chunk)
+            else:
+                ids, d = quant_adc.sq_prefbf_topk(
+                    db["codes"], db["sq_lo"], db["sq_scale"], db["norms"],
+                    db["attrs_int"], db["attrs_float"], queries, programs,
+                    db["vectors"], k=cfg.k, rerank=rerank, chunk=chunk)
+            shard = jax.lax.axis_index(model_axis).astype(jnp.int32)
+            n_loc = jnp.asarray(n_local, jnp.int32)
+            gids = jnp.where(ids >= 0, ids + shard * n_loc, -1)
+            d, i = _merge_topk(d, gids, cfg.k, model_axis)
+            return jnp.where(jnp.isfinite(d), i, -1), d
+
+        fns["serve_brute_pq"] = jax.jit(shard_map(
+            _serve_brute_pq, mesh=mesh,
+            in_specs=(dspecs, qspec, pspec_each),
+            out_specs=(qspec, qspec),
+            check_rep=False))
+
+    return fns
 
 
 def device_put_sharded_db(arrays: dict, mesh: Mesh, specs: dict) -> dict:

@@ -8,55 +8,104 @@ Online :  compile each query's filter to a DNF program, estimate p_hat on the
           scan or the exclusion-distance graph search (section 5), returning
           the k nearest target points.
 
-The two online paths are separate jitted programs (one compiled executable
-per route); the host-side engine partitions each batch by route -- mixing
-them in one program would force both computations on every query.
+The online pipeline itself lives in router.execute (shared with the serving
+engine and the sharded backend); this class owns offline state -- device
+arrays, selectivity sample, optional PQ/SQ codes -- and exposes it through a
+LocalBackend.  ``query(queries, filters, SearchOptions(...))`` is the typed
+API; ``search(**kwargs)`` remains as a deprecated shim over it.
 """
 from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass, field
+import warnings
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import exclusion
 from . import filters as F
 from . import prefbf, selectivity, selector
 from .hnsw import HnswIndex, HnswParams, build_hnsw
-from .search import SearchConfig, favor_graph_search, graph_arrays
+from .options import BuildSpec, QuantSpec, SearchOptions
+from .router import SearchResult, compile_programs, execute
+from .search import graph_arrays
+
+__all__ = ["FavorIndex", "SearchResult"]
+
+_LEGACY_BUILD_KW = ("sel_cfg", "prefbf_chunk", "quantize", "pq_m", "pq_nbits",
+                    "pq_train_iters", "pq_train_sample", "rerank")
 
 
-@dataclass
-class SearchResult:
-    ids: np.ndarray      # (B, k) int64, -1 padded
-    dists: np.ndarray    # (B, k) float32, +inf padded
-    p_hat: np.ndarray    # (B,)
-    routed_brute: np.ndarray  # (B,) bool
-    hops: np.ndarray     # (B,) graph hops (0 for brute-routed queries)
-    path_td: np.ndarray  # (B,)
-    elapsed_s: float = 0.0
-
-    @property
-    def qps(self) -> float:
-        return len(self.ids) / max(self.elapsed_s, 1e-12)
+def _spec_from_legacy(kw: dict) -> BuildSpec:
+    """Map the pre-BuildSpec __init__ kwargs onto a BuildSpec."""
+    quant = None
+    if kw.get("quantize") is not None:
+        quant = QuantSpec(
+            kind=kw["quantize"],
+            m=kw.get("pq_m") if kw.get("pq_m") is not None else 8,
+            nbits=kw.get("pq_nbits") if kw.get("pq_nbits") is not None else 8,
+            train_iters=(kw.get("pq_train_iters")
+                         if kw.get("pq_train_iters") is not None else 20),
+            train_sample=(kw.get("pq_train_sample")
+                          if kw.get("pq_train_sample") is not None else 65536),
+            rerank=kw.get("rerank") if kw.get("rerank") is not None else 4)
+    return BuildSpec(
+        selector=kw.get("sel_cfg") or selector.SelectorConfig(),
+        prefbf_chunk=(kw.get("prefbf_chunk")
+                      if kw.get("prefbf_chunk") is not None else 8192),
+        quant=quant)
 
 
 class FavorIndex:
-    """Single-host FAVOR index (the sharded serve path lives in
-    distributed.py and reuses the same array layout per shard)."""
+    """Single-host FAVOR index.  Execution goes through a LocalBackend; the
+    multi-device variant is core.backend.ShardedBackend behind the same
+    Backend protocol (and the same ServeEngine)."""
 
     def __init__(self, index: HnswIndex, attrs: F.AttributeTable,
-                 sel_cfg: selector.SelectorConfig | None = None,
-                 prefbf_chunk: int = 8192, quantize: str | None = None,
-                 pq_m: int = 8, pq_nbits: int = 8, pq_train_iters: int = 20,
-                 pq_train_sample: int = 65536, rerank: int = 4,
-                 codebook=None):
+                 spec: BuildSpec | None = None, *, codebook=None, **legacy):
+        if isinstance(spec, selector.SelectorConfig):
+            # pre-1.1 third positional was sel_cfg
+            if legacy.get("sel_cfg") is not None:
+                raise ValueError("sel_cfg passed both positionally and by "
+                                 "keyword")
+            legacy["sel_cfg"], spec = spec, None
+        elif spec is not None and not isinstance(spec, BuildSpec):
+            raise TypeError("spec must be a BuildSpec, got "
+                            f"{type(spec).__name__}")
+        unknown = set(legacy) - set(_LEGACY_BUILD_KW)
+        if unknown:
+            raise TypeError(f"unexpected FavorIndex kwargs: {sorted(unknown)}")
+        if legacy and any(v is not None for v in legacy.values()):
+            if spec is not None:
+                raise ValueError("pass either spec=BuildSpec(...) or legacy "
+                                 "kwargs, not both")
+            warnings.warn(
+                "FavorIndex(sel_cfg=/quantize=/pq_*=/rerank=...) is "
+                "deprecated; pass spec=BuildSpec(...)",
+                DeprecationWarning, stacklevel=2)
+            spec = _spec_from_legacy(legacy)
+        if spec is None:
+            spec = BuildSpec()
+        # an externally trained/loaded codebook implies its quant kind AND
+        # geometry: derive the spec from the codebook so fi.spec faithfully
+        # describes the memory format actually in use (reusable for e.g.
+        # ShardedBackend.build parity)
+        if spec.quant is None and codebook is not None:
+            from ..quant import PQCodebook
+            rr = legacy.get("rerank")
+            rr = rr if rr is not None else 4
+            if isinstance(codebook, PQCodebook):
+                q = QuantSpec(kind="pq", m=codebook.m, nbits=codebook.nbits,
+                              rerank=rr)
+            else:
+                q = QuantSpec(kind="sq", rerank=rr)
+            spec = BuildSpec(hnsw=spec.hnsw, selector=spec.selector,
+                             prefbf_chunk=spec.prefbf_chunk, quant=q)
+
+        self.spec = spec
         self.index = index
         self.attrs = attrs
-        self.sel_cfg = sel_cfg or selector.SelectorConfig()
+        self.sel_cfg = spec.selector
         self.schema = attrs.schema
         self.g = graph_arrays(index, attrs)
 
@@ -67,7 +116,7 @@ class FavorIndex:
         self.sample_ints = jnp.asarray(attrs.ints[samp])
         self.sample_floats = jnp.asarray(attrs.floats[samp])
 
-        self.prefbf_chunk = min(prefbf_chunk, max(256, index.n))
+        self.prefbf_chunk = min(spec.prefbf_chunk, max(256, index.n))
         pv, pn, pi, pf = prefbf.pad_db(index.vectors,
                                        index.norms.astype(np.float32),
                                        attrs.ints, attrs.floats,
@@ -76,33 +125,40 @@ class FavorIndex:
                     jnp.asarray(pf))
 
         # -- optional compressed-domain scan state (quant subsystem) ---------
-        if quantize is None and codebook is not None:
+        q = spec.quant
+        if q is not None and codebook is not None:
             from ..quant import PQCodebook
-            quantize = "pq" if isinstance(codebook, PQCodebook) else "sq"
-        self.quantize = quantize
-        self.rerank = rerank
+            cb_kind = "pq" if isinstance(codebook, PQCodebook) else "sq"
+            if cb_kind != q.kind:
+                raise ValueError(f"spec.quant.kind={q.kind!r} does not match "
+                                 f"the supplied {cb_kind!r} codebook")
+            if cb_kind == "pq" and (codebook.m, codebook.nbits) != (q.m, q.nbits):
+                raise ValueError(
+                    f"spec.quant geometry (m={q.m}, nbits={q.nbits}) does not "
+                    f"match the supplied codebook (m={codebook.m}, "
+                    f"nbits={codebook.nbits})")
+        self.quantize = q.kind if q is not None else None
+        self.rerank = q.rerank if q is not None else 4
         self.codebook = codebook
         self._codes = None
         self._cb_dev = None
-        if quantize is not None:
+        self._backend = None
+        if q is not None:
             from .. import quant
             if codebook is None:
-                if quantize == "pq":
+                if q.kind == "pq":
                     codebook = quant.train_pq(
-                        index.vectors, m=pq_m, nbits=pq_nbits,
-                        iters=pq_train_iters, sample=pq_train_sample,
+                        index.vectors, m=q.m, nbits=q.nbits,
+                        iters=q.train_iters, sample=q.train_sample,
                         seed=index.params.seed)
-                elif quantize == "sq":
-                    codebook = quant.train_sq(index.vectors)
                 else:
-                    raise ValueError(
-                        f"quantize must be 'pq', 'sq' or None, got {quantize!r}")
+                    codebook = quant.train_sq(index.vectors)
             self.codebook = codebook
             # encode the *padded* DB so code rows align with the _pf arrays
             # (padded rows encode the zero vector; their +inf norms gate them
             # out of the compressed scan)
             self._codes = jnp.asarray(quant.encode(codebook, pv))
-            if quantize == "pq":
+            if q.kind == "pq":
                 self._cb_dev = (jnp.asarray(codebook.centroids),)
             else:
                 self._cb_dev = (jnp.asarray(codebook.lo),
@@ -111,11 +167,17 @@ class FavorIndex:
     # -- construction --------------------------------------------------------
     @staticmethod
     def build(vectors: np.ndarray, attrs: F.AttributeTable,
-              params: HnswParams | None = None, **kw) -> "FavorIndex":
+              params: HnswParams | None = None,
+              spec: BuildSpec | None = None, **kw) -> "FavorIndex":
+        if spec is not None and spec.hnsw is not None:
+            if params is not None:
+                raise ValueError("pass HNSW params via either params= or "
+                                 "spec.hnsw, not both")
+            params = spec.hnsw
         t0 = time.perf_counter()
         index = build_hnsw(vectors, params)
         build_s = time.perf_counter() - t0
-        fi = FavorIndex(index, attrs, **kw)
+        fi = FavorIndex(index, attrs, spec, **kw)
         fi.build_seconds = build_s
         return fi
 
@@ -123,87 +185,43 @@ class FavorIndex:
     def delta_d(self) -> float:
         return self.index.delta_d
 
+    @property
+    def backend(self):
+        """The LocalBackend view of this index (cached)."""
+        if self._backend is None:
+            from .backend import LocalBackend
+            self._backend = LocalBackend(self)
+        return self._backend
+
     def compile_filters(self, filters, width: int = 8) -> dict:
         if isinstance(filters, F.Filter):
             filters = [filters]
-        progs = [F.compile_filter(f, self.schema, width) for f in filters]
-        return {k: jnp.asarray(v) for k, v in F.stack_programs(progs).items()}
+        return compile_programs(filters, self.schema, len(filters), width)
 
     # -- online search --------------------------------------------------------
+    def query(self, queries: np.ndarray, filters,
+              opts: SearchOptions | None = None) -> SearchResult:
+        """Typed search API: one SearchOptions drives routing + execution
+        (shared router; identical on every backend)."""
+        return execute(self.backend, queries, filters, opts or SearchOptions())
+
     def search(self, queries: np.ndarray, filters, k: int = 10, ef: int = 100,
                *, pbar_min: float = 0.5, gamma: float = 1.0,
                force: str | None = None, use_pallas: bool = False,
                cand_cap: int = 0, use_pq: bool = False,
                rerank: int | None = None) -> SearchResult:
-        """force in {None, "graph", "brute"} pins the route (benchmarks).
-
-        use_pq routes the brute path through the compressed ADC scan (the
-        index must have been built with quantize=); results are exact
-        float32 re-ranks of the top rerank*k ADC candidates."""
-        if use_pq and self.codebook is None:
-            raise ValueError("use_pq=True needs an index built with "
-                             "quantize='pq' or 'sq'")
-        queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
-        B = queries.shape[0]
-        if isinstance(filters, F.Filter):
-            filters = [filters] * B
-        assert len(filters) == B, "one filter per query"
-        programs = self.compile_filters(filters)
-
-        t0 = time.perf_counter()
-        p_hat = np.asarray(selector.estimate_batched(
-            programs, self.sample_ints, self.sample_floats))
-        if force == "brute":
-            brute = np.ones((B,), bool)
-        elif force == "graph":
-            brute = np.zeros((B,), bool)
-        else:
-            brute = selector.route(p_hat, self.sel_cfg.lam)
-
-        ids = np.full((B, k), -1, np.int64)
-        dists = np.full((B, k), np.inf, np.float32)
-        hops = np.zeros((B,), np.int64)
-        path_td = np.zeros((B,), np.int64)
-
-        gi = np.nonzero(~brute)[0]
-        bi = np.nonzero(brute)[0]
-        if len(gi):
-            cfg = SearchConfig(k=k, ef=ef, pbar_min=pbar_min, gamma=gamma,
-                               cand_cap=cand_cap, use_pallas=use_pallas)
-            progs_g = {kk: jnp.asarray(np.asarray(v)[gi]) for kk, v in programs.items()}
-            D = exclusion.exclusion_distance(
-                jnp.asarray(p_hat[gi]), ef, self.delta_d, k=k,
-                p_min=self.sel_cfg.p_min, xp=jnp)
-            out = favor_graph_search(self.g, queries[gi], progs_g, D, cfg)
-            ids[gi] = np.asarray(out["ids"])
-            dists[gi] = np.asarray(out["dists"])
-            hops[gi] = np.asarray(out["hops"])
-            path_td[gi] = np.asarray(out["path_td"])
-        if len(bi):
-            progs_b = {kk: jnp.asarray(np.asarray(v)[bi]) for kk, v in programs.items()}
-            if use_pq:
-                from ..quant import adc as quant_adc
-                pv, pn, pi, pf = self._pf
-                rr = rerank or self.rerank
-                if self.quantize == "pq":
-                    bid, bd = quant_adc.pq_prefbf_topk(
-                        self._codes, pn, pi, pf, queries[bi], progs_b,
-                        self._cb_dev[0], pv, k=k, rerank=rr,
-                        chunk=self.prefbf_chunk, use_pallas=use_pallas)
-                else:
-                    bid, bd = quant_adc.sq_prefbf_topk(
-                        self._codes, self._cb_dev[0], self._cb_dev[1],
-                        pn, pi, pf, queries[bi], progs_b, pv,
-                        k=k, rerank=rr, chunk=self.prefbf_chunk)
-            else:
-                bid, bd = prefbf.prefbf_topk(*self._pf, queries[bi], progs_b,
-                                             k=k, chunk=self.prefbf_chunk,
-                                             use_pallas=use_pallas)
-            ids[bi] = np.asarray(bid)
-            dists[bi] = np.asarray(bd)
-        jax.block_until_ready(dists)
-        elapsed = time.perf_counter() - t0
-        return SearchResult(ids, dists, p_hat, brute, hops, path_td, elapsed)
+        """Deprecated kwarg shim over ``query``; kept so pre-SearchOptions
+        callers run unmodified.  ``rerank=0`` is honored (re-rank exactly the
+        top k) -- it is no longer swallowed by a falsy-or default."""
+        warnings.warn(
+            "FavorIndex.search(k=, ef=, ...) is deprecated; use "
+            "FavorIndex.query(queries, filters, SearchOptions(...))",
+            DeprecationWarning, stacklevel=2)
+        opts = SearchOptions(k=k, ef=ef, pbar_min=pbar_min, gamma=gamma,
+                             force=force, cand_cap=cand_cap,
+                             use_pallas=use_pallas, use_pq=use_pq,
+                             rerank=rerank)
+        return self.query(queries, filters, opts)
 
     def bytes_per_vector(self, quantized: bool = False) -> int:
         """Bytes streamed per DB row by the brute scan (float32 vs codes)."""
@@ -226,7 +244,7 @@ class FavorIndex:
             save_codebook(path + ".quant.npz", self.codebook)
 
     @staticmethod
-    def load(path: str, **kw) -> "FavorIndex":
+    def load(path: str, spec: BuildSpec | None = None, **kw) -> "FavorIndex":
         index = HnswIndex.load(path + ".hnsw.npz")
         z = np.load(path + ".attrs.npz")
         cols = tuple(
@@ -236,5 +254,5 @@ class FavorIndex:
         qpath = path + ".quant.npz"
         if os.path.exists(qpath) and kw.get("codebook") is None:
             from ..quant import load_codebook
-            kw["codebook"] = load_codebook(qpath)  # __init__ infers quantize
-        return FavorIndex(index, attrs, **kw)
+            kw["codebook"] = load_codebook(qpath)  # quant kind is inferred
+        return FavorIndex(index, attrs, spec, **kw)

@@ -1,0 +1,123 @@
+"""Typed build/search options: the one configuration surface for every
+backend (paper Figure 1 knobs as frozen dataclasses).
+
+The seed grew two parallel kwarg blobs -- ``FavorIndex.__init__`` /
+``FavorIndex.search`` on the single-host path and ``make_serve_fns`` on the
+sharded path -- that drifted apart one keyword at a time.  This module pins
+the pipeline's three decision points to three immutable specs:
+
+  QuantSpec     -- offline memory format of the brute-scan DB (PQ/SQ codes)
+  BuildSpec     -- offline construction: HNSW params, selectivity sampling,
+                   scan chunking, optional QuantSpec
+  SearchOptions -- per-query-batch online knobs (k/ef, routing force,
+                   termination, compressed-scan toggle)
+
+All three validate eagerly in ``__post_init__`` so a typo'd route or a
+falsy-but-meaningful ``rerank=0`` fails loudly at construction instead of
+silently auto-routing mid-serve.  ``SearchOptions.search_config()`` lowers
+to the jit-static ``SearchConfig`` consumed by the compiled executables.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from .hnsw import HnswParams
+from .search import SearchConfig
+from .selector import SelectorConfig
+
+ROUTES = (None, "graph", "brute")
+QUANT_KINDS = ("pq", "sq")
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Compressed memory format for the brute-scan rows (quant subsystem).
+
+    kind "pq": M uint8 codes per vector (m bytes); "sq": per-dim affine int8
+    (dim bytes).  ``rerank`` is the default exact-re-rank depth (top
+    ``rerank * k`` ADC candidates get full-precision distances); 0 means
+    re-rank exactly the top k -- an explicit 0 is honored, not coerced.
+    """
+    kind: str = "pq"
+    m: int = 8
+    nbits: int = 8
+    train_iters: int = 20
+    train_sample: int = 65536
+    rerank: int = 4
+
+    def __post_init__(self):
+        if self.kind not in QUANT_KINDS:
+            raise ValueError(f"QuantSpec.kind must be one of {QUANT_KINDS}, "
+                             f"got {self.kind!r}")
+        if not 1 <= self.nbits <= 8:
+            raise ValueError(f"QuantSpec.nbits must be in [1, 8] (uint8 "
+                             f"codes), got {self.nbits}")
+        if self.m < 1:
+            raise ValueError(f"QuantSpec.m must be >= 1, got {self.m}")
+        if self.rerank < 0:
+            raise ValueError(f"QuantSpec.rerank must be >= 0, got {self.rerank}")
+
+
+@dataclass(frozen=True)
+class BuildSpec:
+    """Offline construction spec for any backend (local or sharded)."""
+    hnsw: HnswParams | None = None
+    selector: SelectorConfig = field(default_factory=SelectorConfig)
+    prefbf_chunk: int = 8192
+    quant: QuantSpec | None = None
+
+    def __post_init__(self):
+        if self.prefbf_chunk < 1:
+            raise ValueError(f"BuildSpec.prefbf_chunk must be >= 1, "
+                             f"got {self.prefbf_chunk}")
+        if self.quant is not None and not isinstance(self.quant, QuantSpec):
+            raise TypeError("BuildSpec.quant must be a QuantSpec or None, "
+                            f"got {self.quant!r} (for a bare kind string use "
+                            "QuantSpec(kind=...))")
+        if self.hnsw is not None and not isinstance(self.hnsw, HnswParams):
+            raise TypeError("BuildSpec.hnsw must be HnswParams or None, "
+                            f"got {type(self.hnsw).__name__}")
+
+
+@dataclass(frozen=True)
+class SearchOptions:
+    """Online per-batch options; one instance drives every backend.
+
+    force pins the route for benchmarks/ablations and must be None, "graph"
+    or "brute" -- anything else is a ValueError (the seed treated typos as
+    auto-route).  ``rerank=None`` defers to the index/backend default;
+    ``rerank=0`` means "exact-re-rank only the top k" and is honored as such.
+    """
+    k: int = 10
+    ef: int = 100
+    pbar_min: float = 0.5
+    gamma: float = 1.0
+    force: str | None = None
+    cand_cap: int = 0
+    use_pallas: bool = False
+    use_pq: bool = False
+    rerank: int | None = None
+
+    def __post_init__(self):
+        if self.force not in ROUTES:
+            raise ValueError(f"SearchOptions.force must be one of {ROUTES}, "
+                             f"got {self.force!r}")
+        if self.k < 1:
+            raise ValueError(f"SearchOptions.k must be >= 1, got {self.k}")
+        if self.ef < 1:
+            raise ValueError(f"SearchOptions.ef must be >= 1, got {self.ef}")
+        if self.cand_cap < 0:
+            raise ValueError(f"SearchOptions.cand_cap must be >= 0, "
+                             f"got {self.cand_cap}")
+        if self.rerank is not None and self.rerank < 0:
+            raise ValueError(f"SearchOptions.rerank must be None or >= 0, "
+                             f"got {self.rerank}")
+
+    def search_config(self) -> SearchConfig:
+        """Lower to the jit-static config the compiled executables key on."""
+        return SearchConfig(k=self.k, ef=self.ef, cand_cap=self.cand_cap,
+                            pbar_min=self.pbar_min, gamma=self.gamma,
+                            use_pallas=self.use_pallas)
+
+    def with_(self, **overrides) -> "SearchOptions":
+        return replace(self, **overrides)

@@ -1,0 +1,137 @@
+"""Selector routing shared by every execution backend (paper section 4.1).
+
+The seed buried the route/partition logic inside ``FavorIndex.search``, so
+the sharded serve path could never reuse it and the two paths drifted.  This
+module owns the whole host-side online pipeline:
+
+    compile filters -> estimate p_hat -> plan routes -> partition the batch
+    -> backend.search_graph / backend.search_brute -> reassemble
+
+``execute()`` is the single entry point; ``FavorIndex.query`` and
+``ServeEngine`` both call it, with the backend (local single-host or sharded
+multi-device) supplied as a parameter.  Identical queries therefore take
+identical routes on every backend -- the selector decision is made exactly
+once, here, from the backend's own selectivity estimate.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import filters as F
+from . import selector
+from .options import ROUTES, SearchOptions
+
+
+@dataclass
+class SearchResult:
+    ids: np.ndarray      # (B, k) int64, -1 padded
+    dists: np.ndarray    # (B, k) float32, +inf padded
+    p_hat: np.ndarray    # (B,)
+    routed_brute: np.ndarray  # (B,) bool
+    # hops/path_td are per-query graph traversal diagnostics: 0 for
+    # brute-routed queries AND for backends that do not report them (the
+    # sharded serve path returns only ids/dists from its top-k merge)
+    hops: np.ndarray     # (B,)
+    path_td: np.ndarray  # (B,)
+    elapsed_s: float = 0.0
+
+    @property
+    def qps(self) -> float:
+        return len(self.ids) / max(self.elapsed_s, 1e-12)
+
+
+@dataclass(frozen=True)
+class RoutePlan:
+    """Per-query routing decision: True -> PreFBF brute scan."""
+    p_hat: np.ndarray
+    brute: np.ndarray
+
+    @property
+    def graph_idx(self) -> np.ndarray:
+        return np.nonzero(~self.brute)[0]
+
+    @property
+    def brute_idx(self) -> np.ndarray:
+        return np.nonzero(self.brute)[0]
+
+
+def broadcast_filters(filters, batch: int) -> list:
+    """One filter -> one per query; otherwise the count must match."""
+    if isinstance(filters, F.Filter):
+        filters = [filters] * batch
+    filters = list(filters)
+    if len(filters) != batch:
+        raise ValueError(f"expected one filter per query: got {len(filters)} "
+                         f"filters for {batch} queries")
+    return filters
+
+
+def compile_programs(filters, schema: F.Schema, batch: int,
+                     width: int = 8) -> dict:
+    """Compile + stack one DNF program per query (device-resident dict)."""
+    filters = broadcast_filters(filters, batch)
+    progs = [F.compile_filter(f, schema, width) for f in filters]
+    return {k: jnp.asarray(v) for k, v in F.stack_programs(progs).items()}
+
+
+def plan_routes(p_hat: np.ndarray, lam: float,
+                force: str | None = None) -> RoutePlan:
+    """Route each query by estimated selectivity (p_hat < lambda -> brute);
+    ``force`` pins every query to one route (validated, not pattern-matched:
+    a typo'd route name raises instead of silently auto-routing)."""
+    if force not in ROUTES:
+        raise ValueError(f"force must be one of {ROUTES}, got {force!r}")
+    p_hat = np.asarray(p_hat)
+    if force == "brute":
+        brute = np.ones(p_hat.shape, bool)
+    elif force == "graph":
+        brute = np.zeros(p_hat.shape, bool)
+    else:
+        brute = selector.route(p_hat, lam)
+    return RoutePlan(p_hat, brute)
+
+
+def take_programs(programs: dict, idx: np.ndarray) -> dict:
+    """Row-slice a stacked program dict to a sub-batch."""
+    return {k: jnp.asarray(np.asarray(v)[idx]) for k, v in programs.items()}
+
+
+def execute(backend, queries, filters, opts: SearchOptions) -> SearchResult:
+    """Run one filtered-ANNS batch through ``backend`` (paper Fig. 1 online
+    phase): estimate -> route -> per-route execution -> reassembly."""
+    backend.validate(opts)
+    queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
+    b = queries.shape[0]
+    programs = compile_programs(filters, backend.schema, b)
+
+    t0 = time.perf_counter()
+    p_hat = np.asarray(backend.estimate(programs))
+    plan = plan_routes(p_hat, backend.sel_cfg.lam, opts.force)
+
+    ids = np.full((b, opts.k), -1, np.int64)
+    dists = np.full((b, opts.k), np.inf, np.float32)
+    hops = np.zeros((b,), np.int64)
+    path_td = np.zeros((b,), np.int64)
+
+    gi, bi = plan.graph_idx, plan.brute_idx
+    if len(gi):
+        out = backend.search_graph(queries[gi], take_programs(programs, gi),
+                                   jnp.asarray(p_hat[gi]), opts)
+        ids[gi] = np.asarray(out["ids"])
+        dists[gi] = np.asarray(out["dists"])
+        hops[gi] = np.asarray(out.get("hops", np.zeros(len(gi), np.int64)))
+        path_td[gi] = np.asarray(out.get("path_td",
+                                         np.zeros(len(gi), np.int64)))
+    if len(bi):
+        bid, bd = backend.search_brute(queries[bi], take_programs(programs, bi),
+                                       opts)
+        ids[bi] = np.asarray(bid)
+        dists[bi] = np.asarray(bd)
+    # the np.asarray conversions above already synced the device work
+    elapsed = time.perf_counter() - t0
+    return SearchResult(ids, dists, plan.p_hat, plan.brute, hops, path_td,
+                        elapsed)

@@ -6,16 +6,31 @@ Routing (section 4.1) happens on estimated selectivity *before* search; the
 engine groups each assembled batch into a brute sub-batch and a graph
 sub-batch so every executable runs with uniform static shapes (one XLA
 program per route, padded to bucket sizes to bound recompilation).
+
+The engine is backend-agnostic: it drives any ``core.backend.Backend``
+(LocalBackend on one host, ShardedBackend across a mesh, future cache/async
+backends) through the shared ``router.execute`` pipeline, configured by one
+frozen ``SearchOptions``:
+
+    eng = ServeEngine(LocalBackend(fi), SearchOptions(k=10, ef=96))
+    eng = ServeEngine(ShardedBackend.build(vecs, attrs, mesh, spec), opts)
+
+Passing a FavorIndex (optionally with the legacy k=/ef=/use_pq= kwargs)
+still works and wraps it in a LocalBackend.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from ..core import filters as F
+from ..core import router
+from ..core.backend import LocalBackend
 from ..core.favor import FavorIndex
+from ..core.options import SearchOptions
 
 
 @dataclass
@@ -44,21 +59,50 @@ def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512)) -> int:
 
 
 class ServeEngine:
-    """Single-host engine over a FavorIndex (the sharded variant swaps the
-    search calls for distributed.make_serve_fns; same control flow)."""
+    """Queue/batch/deadline front-end over one execution backend."""
 
-    def __init__(self, index: FavorIndex, k: int = 10, ef: int = 100,
+    def __init__(self, backend, opts: SearchOptions | None = None, *,
                  max_batch: int = 256, max_wait_ms: float = 2.0,
-                 use_pq: bool = False):
-        self.index = index
-        self.k, self.ef = k, ef
+                 k: int | None = None, ef: int | None = None,
+                 use_pq: bool | None = None):
+        if isinstance(backend, FavorIndex):
+            backend = LocalBackend(backend)
+        if isinstance(opts, int) and not isinstance(opts, bool):
+            # pre-1.1 second positional was k: ServeEngine(fi, 10)
+            if k is not None:
+                raise ValueError("k passed both positionally and by keyword")
+            k, opts = opts, None
+        if opts is not None and not isinstance(opts, SearchOptions):
+            raise TypeError("opts must be a SearchOptions, got "
+                            f"{type(opts).__name__}")
+        if k is not None or ef is not None or use_pq is not None:
+            if opts is not None:
+                raise ValueError("pass either opts=SearchOptions(...) or "
+                                 "legacy k=/ef=/use_pq= kwargs, not both")
+            warnings.warn(
+                "ServeEngine(k=, ef=, use_pq=) is deprecated; pass "
+                "SearchOptions(...)", DeprecationWarning, stacklevel=2)
+            opts = SearchOptions(k=k if k is not None else 10,
+                                 ef=ef if ef is not None else 100,
+                                 use_pq=bool(use_pq))
+        self.backend = backend
+        self.opts = opts or SearchOptions()
+        # incompatible (backend, opts) pairs fail here, not mid-serve
+        backend.validate(self.opts)
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
-        self.use_pq = use_pq
         self.queue: list[Request] = []
         self.stats = {"graph": 0, "brute": 0, "batches": 0}
         self.latencies: list[float] = []
         self._next_rid = 0
+
+    @property
+    def k(self) -> int:
+        return self.opts.k
+
+    @property
+    def ef(self) -> int:
+        return self.opts.ef
 
     def submit(self, query: np.ndarray, flt: "F.Filter") -> int:
         rid = self._next_rid
@@ -96,8 +140,7 @@ class ServeEngine:
             queries = np.concatenate(
                 [queries, np.repeat(queries[-1:], b - len(batch), 0)])
             flts = flts + [flts[-1]] * (b - len(batch))
-        res = self.index.search(queries, flts, k=self.k, ef=self.ef,
-                                use_pq=self.use_pq)
+        res = router.execute(self.backend, queries, flts, self.opts)
         t_done = time.perf_counter()
         out = []
         for i, r in enumerate(batch):
