@@ -46,8 +46,7 @@ def _drive(backend, opts, requests, max_batch=128):
     for q, flt in requests:
         eng.submit(q, flt)
     eng.run()          # warm-up: compiles every (route, bucket) executable
-    eng.latencies.clear()
-    eng.stats = {"graph": 0, "brute": 0, "batches": 0}
+    eng.reset_stats()
     for q, flt in requests:
         eng.submit(q, flt)
     t0 = time.perf_counter()

@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (bench_ablation, bench_qps_recall, bench_quant,
+    from . import (bench_ablation, bench_cache, bench_qps_recall, bench_quant,
                    bench_selectivity, bench_serve_backends,
                    bench_verification)
 
@@ -26,6 +26,8 @@ def main() -> None:
         ("qps_recall_figs4_5_8_9", bench_qps_recall.run),
         ("quant_pq_adc", bench_quant.run),
         ("serve_backends", bench_serve_backends.run),
+        # also emits the stable cross-PR serving summary BENCH_serve.json
+        ("serve_cache_zipf", bench_cache.run),
         ("selectivity_fig7", bench_selectivity.run),
         ("exclusion_ablation_fig10", bench_ablation.run_exclusion),
         ("termination_fig11", bench_ablation.run_termination),

@@ -1,0 +1,324 @@
+"""CachingBackend: a Backend decorator that layers the serving caches over
+any inner backend (LocalBackend, ShardedBackend, future remotes) without the
+router or ServeEngine changing shape.
+
+Layer placement follows the online pipeline (estimate -> route -> scan):
+
+  * ``lookup_result``/``record_result`` -- the optional router hooks -- run
+    the SemanticResultCache *before* estimation, so an exact-repeat
+    (query, filter) pair skips the whole pipeline.
+  * ``estimate`` runs the SelectivityCache keyed on canonical signatures and
+    forwards only first-occurrence cache misses to the inner estimator.
+  * ``search_brute`` runs the CandidateCache: a hit scans the cached
+    matching-ID block (exact distances, identical results) instead of the
+    corpus; admission is on the *second* brute miss of a signature so one-off
+    filters never pay the O(N) extension computation.
+
+Every call first syncs against ``inner.version()``: an epoch bump drops all
+three layers at once (the cheap, always-correct invalidation granularity for
+batch reindex/attribute refresh workflows).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..core import filters as F
+from ..core.options import CacheSpec, SearchOptions
+from ..core.router import take_programs
+from .layers import CandidateCache, SelectivityCache, SemanticResultCache
+from .lru import LruTtlCache
+
+_REJECTED = -1  # _brute_seen sentinel: signature failed candidate admission
+
+
+def _corpus_view(inner):
+    """Host-side (vectors, norms, ints, floats) of the inner backend's rows,
+    or None when the backend does not expose its corpus (candidate layer
+    then bypasses).  Row order matches the IDs the backend returns."""
+    fi = getattr(inner, "index", None)           # LocalBackend -> FavorIndex
+    if fi is not None:
+        hx = fi.index
+        return (np.asarray(hx.vectors, np.float32),
+                np.asarray(hx.norms, np.float32),
+                fi.attrs.ints, fi.attrs.floats)
+    sharded = getattr(inner, "sharded", None)    # ShardedBackend
+    if sharded is not None:
+        a = sharded.arrays
+        return (np.asarray(a["vectors"], np.float32),
+                np.asarray(a["norms"], np.float32),
+                a["attrs_int"], a["attrs_float"])
+    return None
+
+
+class CachingBackend:
+    """Wrap ``inner`` with the selectivity/candidate/semantic cache layers."""
+
+    def __init__(self, inner, spec: CacheSpec | None = None, *,
+                 clock=time.monotonic):
+        self.inner = inner
+        self.spec = spec or CacheSpec()
+        self.selectivity_cache = SelectivityCache(self.spec, clock)
+        self.candidate_cache = CandidateCache(self.spec, clock)
+        self.semantic_cache = SemanticResultCache(self.spec, clock)
+        # signature -> brute-miss count; admission to the candidate cache
+        # happens on the second miss (cache-on-re-reference)
+        self._brute_seen = LruTtlCache(4 * self.spec.candidate_cap,
+                                       self.spec.ttl_s, clock)
+        # lazy: resolved on the first brute batch that can use it, so
+        # wrapping a backend never materializes a corpus view it won't need
+        self._corpus_view = None
+        # two-slot signature memo: router.execute hands the *same*
+        # program-dict object to lookup_result, estimate and record_result
+        # whenever the sub-batch is the whole batch, with at most one route
+        # sub-batch dict in between -- two slots cover the full call chain
+        # (the held references keep the identity-keys valid)
+        self._sig_memo: list = []
+        self._epoch = inner.version()
+        self.invalidations = 0
+
+    # -- Backend protocol (delegated identity) -------------------------------
+    @property
+    def schema(self) -> F.Schema:
+        return self.inner.schema
+
+    @property
+    def sel_cfg(self):
+        return self.inner.sel_cfg
+
+    def validate(self, opts: SearchOptions) -> None:
+        self.inner.validate(opts)
+
+    def version(self) -> int:
+        return self.inner.version()
+
+    def __getattr__(self, name):
+        # transparent decorator: anything outside the cache surface
+        # (bytes_per_vector, mesh, index, ...) resolves on the inner backend
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self.inner, name)
+
+    # -- epoch invalidation ---------------------------------------------------
+    def _corpus(self):
+        """Host corpus view for the candidate layer (lazily resolved)."""
+        if not self.spec.candidates:
+            return None
+        if self._corpus_view is None:
+            self._corpus_view = _corpus_view(self.inner)
+        return self._corpus_view
+
+    def _sync_epoch(self) -> None:
+        v = self.inner.version()
+        if v != self._epoch:
+            self.clear()
+            self._epoch = v
+            self.invalidations += 1
+            self._corpus_view = None  # re-resolved on next use
+
+    def clear(self) -> None:
+        """Drop every cached entry in all three layers (counters survive)."""
+        self.selectivity_cache.clear()
+        self.candidate_cache.clear()
+        self.semantic_cache.clear()
+        self._brute_seen.clear()
+        self._sig_memo = []
+
+    def _signatures(self, programs: dict) -> list[str]:
+        """Per-query canonical signatures, memoized on array identity."""
+        vals = tuple(programs[k] for k in ("valid", "imask", "flo", "fhi"))
+        for j, (prev, sigs) in enumerate(self._sig_memo):
+            if len(prev) == len(vals) and all(a is b for a, b in
+                                              zip(prev, vals)):
+                if j:
+                    self._sig_memo.insert(0, self._sig_memo.pop(j))
+                return sigs
+        sigs = F.batch_signatures(programs)
+        self._sig_memo.insert(0, (vals, sigs))
+        del self._sig_memo[2:]
+        return sigs
+
+    # -- semantic layer: router fast-path hooks -------------------------------
+    def lookup_result(self, queries: np.ndarray, programs: dict,
+                      opts: SearchOptions):
+        """Optional router hook: per-query semantic hits for the batch, or
+        None when the layer is disabled / nothing hit."""
+        self._sync_epoch()
+        if not self.semantic_cache.enabled:
+            return None
+        queries = np.asarray(queries, np.float32)
+        sigs = self._signatures(programs)
+        hit = np.zeros((len(sigs),), bool)
+        rows = []
+        for i, sig in enumerate(sigs):
+            e = self.semantic_cache.get(sig, opts, queries[i])
+            if e is not None:
+                hit[i] = True
+                rows.append(e)
+        if not rows:
+            return None
+        return {
+            "hit": hit,
+            "ids": np.stack([e.ids for e in rows]),
+            "dists": np.stack([e.dists for e in rows]),
+            "p_hat": np.asarray([e.p_hat for e in rows], np.float32),
+            "routed_brute": np.asarray([e.routed_brute for e in rows], bool),
+        }
+
+    def record_result(self, queries: np.ndarray, programs: dict,
+                      opts: SearchOptions, ids, dists, p_hat,
+                      routed_brute) -> None:
+        """Optional router hook: store freshly computed per-query results."""
+        if not self.semantic_cache.enabled:
+            return
+        queries = np.asarray(queries, np.float32)
+        sigs = self._signatures(programs)
+        ids = np.asarray(ids)
+        dists = np.asarray(dists)
+        p_hat = np.asarray(p_hat)
+        routed_brute = np.asarray(routed_brute)
+        for i, sig in enumerate(sigs):
+            self.semantic_cache.put(sig, opts, queries[i], ids[i], dists[i],
+                                    float(p_hat[i]), bool(routed_brute[i]))
+
+    # -- selectivity layer ----------------------------------------------------
+    def estimate(self, programs: dict):
+        self._sync_epoch()
+        sigs = self._signatures(programs)
+        b = len(sigs)
+        p_hat = np.empty((b,), np.float32)
+        first_row: dict[str, int] = {}   # sig -> first miss row
+        for i, sig in enumerate(sigs):
+            cached = self.selectivity_cache.get(sig)
+            if cached is not None:
+                p_hat[i] = cached
+            elif sig not in first_row:
+                first_row[sig] = i
+        if first_row:
+            rows = np.asarray(sorted(first_row.values()), np.int64)
+            fresh = np.asarray(self.inner.estimate(
+                take_programs(programs, rows)), np.float32)
+            by_sig = {sigs[r]: fresh[j] for j, r in enumerate(rows)}
+            for sig, p in by_sig.items():
+                self.selectivity_cache.put(sig, float(p))
+            for i, sig in enumerate(sigs):
+                if sig in by_sig:
+                    p_hat[i] = by_sig[sig]
+        return p_hat
+
+    # -- graph route: pass-through --------------------------------------------
+    def search_graph(self, queries, programs: dict, p_hat,
+                     opts: SearchOptions) -> dict:
+        self._sync_epoch()
+        return self.inner.search_graph(queries, programs, p_hat, opts)
+
+    # -- candidate layer: brute route -----------------------------------------
+    def _extension(self, programs: dict, row: int) -> np.ndarray:
+        """Exact matching-ID set of one program row over the full corpus."""
+        _, _, ints, floats = self._corpus()
+        prog = {k: np.asarray(v)[row] for k, v in programs.items()}
+        mask = F.eval_program(prog, ints, floats)
+        return np.nonzero(mask)[0].astype(np.int64)
+
+    def _scan_block(self, queries: np.ndarray, cand: np.ndarray, k: int):
+        """Exact top-k of ``queries`` over the candidate rows: the same
+        qn + vn - 2*q.v distance the PreFBF scan computes, restricted to the
+        predicate's true extension (so results match the full scan)."""
+        vectors, norms, _, _ = self._corpus()
+        v = vectors[cand]                      # (C, d)
+        vn = norms[cand]                       # (C,)
+        qn = np.einsum("bd,bd->b", queries, queries).astype(np.float32)
+        d2 = qn[:, None] + vn[None, :] - 2.0 * (queries @ v.T)
+        dist = np.sqrt(np.maximum(d2, 0.0), dtype=np.float32)
+        c = dist.shape[1]
+        ids = np.full((len(queries), k), -1, np.int64)
+        out = np.full((len(queries), k), np.inf, np.float32)
+        kk = min(k, c)
+        part = np.argpartition(dist, kk - 1, axis=1)[:, :kk]
+        pd = np.take_along_axis(dist, part, axis=1)
+        order = np.argsort(pd, axis=1, kind="stable")
+        ids[:, :kk] = cand[np.take_along_axis(part, order, axis=1)]
+        out[:, :kk] = np.take_along_axis(pd, order, axis=1)
+        return ids, out
+
+    def search_brute(self, queries, programs: dict, opts: SearchOptions):
+        self._sync_epoch()
+        # a compressed (ADC) scan is not the exact-distance computation the
+        # candidate block runs, so use_pq bypasses this layer entirely
+        serveable = (self.candidate_cache.enabled and not opts.use_pq
+                     and self._corpus() is not None)
+        if not serveable:
+            if self.candidate_cache.enabled:
+                self.candidate_cache.bypasses += int(queries.shape[0])
+            return self.inner.search_brute(queries, programs, opts)
+
+        queries_np = np.asarray(queries, np.float32)
+        sigs = self._signatures(programs)
+        b = len(sigs)
+        ids = np.full((b, opts.k), -1, np.int64)
+        dists = np.full((b, opts.k), np.inf, np.float32)
+
+        hit_rows: dict[str, list[int]] = {}
+        blocks: dict[str, np.ndarray] = {}
+        miss: list[int] = []
+        for i, sig in enumerate(sigs):
+            # one get() per ROW (not per unique signature) so the reported
+            # hit/miss counters reflect served lookups, not distinct keys
+            cand = self.candidate_cache.get(sig)
+            if cand is None:
+                miss.append(i)
+                continue
+            blocks[sig] = cand
+            hit_rows.setdefault(sig, []).append(i)
+
+        for sig, rows in hit_rows.items():
+            rid, rd = self._scan_block(queries_np[rows], blocks[sig], opts.k)
+            ids[rows] = rid
+            dists[rows] = rd
+
+        if miss:
+            rows = np.asarray(miss, np.int64)
+            mid, md = self.inner.search_brute(
+                queries_np[rows], take_programs(programs, rows), opts)
+            ids[rows] = np.asarray(mid)
+            dists[rows] = np.asarray(md)
+            n_rows = self._corpus()[0].shape[0]
+            miss_first: dict[str, int] = {}  # one reference per sig per batch
+            for i in miss:
+                miss_first.setdefault(sigs[i], i)
+            for sig, i in miss_first.items():
+                seen = self._brute_seen.get(sig, 0)
+                if seen == _REJECTED:
+                    continue  # known-ineligible: never recompute extensions
+                self._brute_seen.put(sig, seen + 1)
+                if seen < 1:
+                    continue  # first miss: one-off filters stay free
+                # second miss: admit.  A cached estimate far above the
+                # admission bound rejects without the O(N) extension pass
+                # (2x slack absorbs sample-estimator error)
+                p_est = self.selectivity_cache.peek(sig)
+                if p_est is not None and p_est > 2.0 * self.candidate_cache.p_max:
+                    self._brute_seen.put(sig, _REJECTED)
+                    self.candidate_cache.bypasses += 1
+                    continue
+                if not self.candidate_cache.admit(
+                        sig, self._extension(programs, i), n_rows):
+                    self._brute_seen.put(sig, _REJECTED)
+        return ids, dists
+
+    # -- accounting -----------------------------------------------------------
+    def cache_stats(self) -> dict:
+        """Per-layer hit/miss/bypass counters (surfaced by ServeEngine)."""
+        out = {
+            "selectivity": self.selectivity_cache.stats(),
+            "candidates": self.candidate_cache.stats(),
+            "semantic": self.semantic_cache.stats(),
+            "epoch": self._epoch,
+            "invalidations": self.invalidations,
+        }
+        for layer in ("selectivity", "candidates", "semantic"):
+            st = out[layer]
+            asked = st["hits"] + st["misses"]
+            st["hit_rate"] = st["hits"] / asked if asked else 0.0
+        return out

@@ -3,21 +3,24 @@ from . import exclusion, filters, prefbf, refimpl, router, selectivity, selector
 from .favor import FavorIndex
 from .filters import (And, AttributeTable, ColumnSpec, Equality, FalseFilter,
                       Filter, Inclusion, Not, Or, Range, Schema, TrueFilter,
-                      compile_filter, paper_filters, paper_schema,
+                      batch_signatures, compile_filter, filter_signature,
+                      paper_filters, paper_schema, program_signature,
                       random_attributes, stack_programs)
 from .hnsw import HnswIndex, HnswParams, build_hnsw
-from .options import BuildSpec, QuantSpec, SearchOptions
+from .options import BuildSpec, CacheSpec, QuantSpec, SearchOptions
 from .backend import Backend, LocalBackend, ShardedBackend
 from .router import RoutePlan, SearchResult
 from .search import SearchConfig, favor_graph_search, graph_arrays, rsf_graph_search
 
 __all__ = [
-    "And", "AttributeTable", "Backend", "BuildSpec", "ColumnSpec", "Equality",
-    "FalseFilter", "Filter", "FavorIndex", "HnswIndex", "HnswParams",
-    "Inclusion", "LocalBackend", "Not", "Or", "QuantSpec", "Range",
-    "RoutePlan", "Schema", "SearchConfig", "SearchOptions", "SearchResult",
-    "ShardedBackend", "TrueFilter", "build_hnsw", "compile_filter",
-    "exclusion", "favor_graph_search", "filters", "graph_arrays",
-    "paper_filters", "paper_schema", "prefbf", "random_attributes", "refimpl",
-    "router", "rsf_graph_search", "selectivity", "selector", "stack_programs",
+    "And", "AttributeTable", "Backend", "BuildSpec", "CacheSpec",
+    "ColumnSpec", "Equality", "FalseFilter", "Filter", "FavorIndex",
+    "HnswIndex", "HnswParams", "Inclusion", "LocalBackend", "Not", "Or",
+    "QuantSpec", "Range", "RoutePlan", "Schema", "SearchConfig",
+    "SearchOptions", "SearchResult", "ShardedBackend", "TrueFilter",
+    "batch_signatures", "build_hnsw", "compile_filter", "exclusion",
+    "favor_graph_search", "filter_signature", "filters", "graph_arrays",
+    "paper_filters", "paper_schema", "prefbf", "program_signature",
+    "random_attributes", "refimpl", "router", "rsf_graph_search",
+    "selectivity", "selector", "stack_programs",
 ]

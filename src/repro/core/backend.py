@@ -53,6 +53,12 @@ class Backend(Protocol):
         """Raise ValueError when ``opts`` cannot run on this backend."""
         ...
 
+    def version(self) -> int:
+        """Monotonic data epoch: bumped whenever the served rows change, so
+        layered caches (repro.cache.CachingBackend) can drop stale entries
+        without tracking individual mutations."""
+        ...
+
     def estimate(self, programs: dict):
         """(B,) estimated selectivity over the backend's sample."""
         ...
@@ -88,6 +94,10 @@ class LocalBackend:
         if opts.use_pq and self.index.codebook is None:
             raise ValueError("use_pq=True needs an index built with "
                              "quantize='pq' or 'sq' (BuildSpec.quant)")
+
+    def version(self) -> int:
+        """Data epoch of the underlying FavorIndex (see Backend.version)."""
+        return self.index.version()
 
     def estimate(self, programs: dict):
         return selector.estimate_batched(programs, self.index.sample_ints,
@@ -156,6 +166,7 @@ class ShardedBackend:
         self._qmult = 1
         for ax in self.query_axes:
             self._qmult *= mesh.shape[ax]
+        self._epoch = 0
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -237,6 +248,15 @@ class ShardedBackend:
         return queries, programs, b
 
     # -- Backend protocol -----------------------------------------------------
+    def version(self) -> int:
+        """Data epoch (see Backend.version); ``bump_version()`` after any
+        reshard/re-attach that changes the served rows."""
+        return self._epoch
+
+    def bump_version(self) -> int:
+        self._epoch += 1
+        return self._epoch
+
     def validate(self, opts: SearchOptions) -> None:
         if opts.use_pq and self.quant is None:
             raise ValueError("use_pq=True needs a ShardedBackend built with "

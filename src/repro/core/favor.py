@@ -140,6 +140,7 @@ class FavorIndex:
         self.quantize = q.kind if q is not None else None
         self.rerank = q.rerank if q is not None else 4
         self.codebook = codebook
+        self._epoch = 0
         self._codes = None
         self._cb_dev = None
         self._backend = None
@@ -184,6 +185,16 @@ class FavorIndex:
     @property
     def delta_d(self) -> float:
         return self.index.delta_d
+
+    def version(self) -> int:
+        """Data epoch consumed by layered caches (Backend.version)."""
+        return self._epoch
+
+    def bump_version(self) -> int:
+        """Mark the served rows as changed (rebuild, attribute update):
+        CachingBackend wrappers drop every cached entry on the next call."""
+        self._epoch += 1
+        return self._epoch
 
     @property
     def backend(self):

@@ -27,6 +27,7 @@ truncating.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from dataclasses import dataclass
 from typing import Sequence
@@ -367,6 +368,97 @@ def compile_filter(f: Filter, schema: Schema, width: int = 8) -> FilterProgram:
         flo[w] = c.flo
         fhi[w] = c.fhi
     return FilterProgram(valid, imask, flo, fhi)
+
+
+# ---------------------------------------------------------------------------
+# Canonical signatures (serving-side cache keys)
+#
+# Two predicates that compile to the same *set* of DNF conjunctions are
+# semantically identical, whatever the AST looked like: the compiler already
+# normalizes double negation (NNF) and associativity/commutativity of AND is
+# elementwise (bitmask-&, interval-intersect), so only the disjunct *order*
+# and duplicate/subsumed disjuncts distinguish equivalent programs.  The
+# canonical form therefore drops dead rows, drops rows subsumed by another
+# row, sorts the survivors bytewise and hashes them -- a stable 128-bit key
+# that every cache layer (selectivity, candidate, semantic) can share.
+# Signature equality is *sound* (equal signature => equal predicate on every
+# row); it is deliberately not complete (e.g. two overlapping ranges that
+# union to a third are not merged).
+# ---------------------------------------------------------------------------
+SIGNATURE_VERSION = 1  # bump when the canonical byte layout changes
+
+
+def _canon_rows(valid, imask, flo, fhi) -> list[bytes]:
+    """Canonical serialized conjunctions of one program (see module note).
+
+    Runs once per query per cache operation on the serving hot path, so the
+    subsumption test is vectorized over all W^2 row pairs instead of a
+    Python pair loop.
+    """
+    valid = np.asarray(valid)
+    imask = np.asarray(imask, np.uint32)
+    # -0.0 normalization: -0.0 and 0.0 compare equal but serialize
+    # differently; force the canonical zero before taking bytes
+    flo = np.asarray(flo, np.float32) + 0.0
+    fhi = np.asarray(fhi, np.float32) + 0.0
+    live = np.nonzero(valid > 0)[0]
+    if live.size == 0:
+        return []
+    im, lo, hi = imask[live], flo[live], fhi[live]
+    # cover[v, w] -- row v covers row w: superset bitmask on every int
+    # column AND containing interval on every float column; mutual cover is
+    # row identity, strict cover marks w subsumed (Or(a, a), Or(a, And(a,b)))
+    cover = np.ones((live.size, live.size), bool)
+    if im.shape[1]:
+        cover &= ((im[:, None, :] & im[None, :, :]) == im[None, :, :]).all(-1)
+    if lo.shape[1]:
+        cover &= (lo[:, None, :] <= lo[None, :, :]).all(-1)
+        cover &= (hi[:, None, :] >= hi[None, :, :]).all(-1)
+    strict = cover & ~cover.T     # covers w without being covered back
+    keep = ~strict.any(axis=0)
+    rows = {im[w].tobytes() + lo[w].tobytes() + hi[w].tobytes()
+            for w in np.nonzero(keep)[0]}
+    return sorted(rows)
+
+
+def program_signature(program) -> str:
+    """Stable hex signature of one program's canonical DNF.
+
+    ``program`` is a FilterProgram or a dict with 1-query arrays
+    (valid (W,), imask (W, m_i), flo/fhi (W, m_f)).
+    """
+    if isinstance(program, FilterProgram):
+        valid, imask = program.valid, program.imask
+        flo, fhi = program.flo, program.fhi
+    else:
+        valid, imask = program["valid"], program["imask"]
+        flo, fhi = program["flo"], program["fhi"]
+    h = hashlib.blake2b(digest_size=16)
+    m_i = int(np.asarray(imask).shape[-1])
+    m_f = int(np.asarray(flo).shape[-1])
+    h.update(f"favor-sig-v{SIGNATURE_VERSION}:{m_i}:{m_f}".encode())
+    for row in _canon_rows(valid, imask, flo, fhi):
+        h.update(b"|")
+        h.update(row)
+    return h.hexdigest()
+
+
+def filter_signature(f: Filter, schema: Schema, width: int = 8) -> str:
+    """Canonical signature of a filter AST: semantically equivalent
+    reorderings (commuted AND/OR children, double negation, duplicate
+    disjuncts) hash identically, so cache entries are shared across them."""
+    return program_signature(compile_filter(f, schema, width))
+
+
+def batch_signatures(programs: dict) -> list[str]:
+    """Per-query signatures of a stacked (B, W, ...) program dict."""
+    valid = np.asarray(programs["valid"])
+    imask = np.asarray(programs["imask"])
+    flo = np.asarray(programs["flo"])
+    fhi = np.asarray(programs["fhi"])
+    return [program_signature({"valid": valid[b], "imask": imask[b],
+                               "flo": flo[b], "fhi": fhi[b]})
+            for b in range(valid.shape[0])]
 
 
 def stack_programs(programs: Sequence[FilterProgram]) -> dict[str, np.ndarray]:

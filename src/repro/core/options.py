@@ -80,6 +80,63 @@ class BuildSpec:
 
 
 @dataclass(frozen=True)
+class CacheSpec:
+    """Serving-side cache configuration (cache subsystem, ``repro.cache``).
+
+    Three layers, all keyed by the canonical filter signature
+    (``filters.filter_signature``) and all LRU+TTL bounded:
+
+      selectivity -- signature -> p_hat; skips ``backend.estimate`` for
+                     repeat filters.  Exact: the estimator is deterministic
+                     over the fixed sample, so a hit returns the same value.
+      candidates  -- signature -> matching-ID set for hot *low-selectivity*
+                     filters; repeat brute routes scan only the cached block
+                     instead of the full corpus.  Exact: the ID set is the
+                     predicate's true extension.
+      semantic    -- (query vector, signature, opts) -> top-k, redisvl-style.
+                     ``semantic_threshold`` is the max L2 distance between
+                     the incoming and cached query vector for a hit; the
+                     default 0.0 serves only exact repeats and is therefore
+                     lossless, larger values trade recall for QPS.
+
+    ``ttl_s=None`` disables time-based expiry (epoch invalidation via
+    ``Backend.version()`` still applies).  ``candidate_p_max`` gates which
+    signatures get an ID set (only filters that route brute benefit);
+    ``candidate_max_ids`` bounds one entry's memory.
+    """
+    selectivity: bool = True
+    candidates: bool = True
+    semantic: bool = True
+    selectivity_cap: int = 4096
+    candidate_cap: int = 64
+    candidate_p_max: float = 0.02
+    candidate_max_ids: int = 262144
+    semantic_cap: int = 1024
+    semantic_per_key: int = 32
+    semantic_threshold: float = 0.0
+    ttl_s: float | None = None
+
+    def __post_init__(self):
+        for name in ("selectivity_cap", "candidate_cap", "semantic_cap",
+                     "semantic_per_key", "candidate_max_ids"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"CacheSpec.{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+        if not 0.0 <= self.candidate_p_max <= 1.0:
+            raise ValueError("CacheSpec.candidate_p_max must be in [0, 1], "
+                             f"got {self.candidate_p_max}")
+        if self.semantic_threshold < 0.0:
+            raise ValueError("CacheSpec.semantic_threshold must be >= 0, "
+                             f"got {self.semantic_threshold}")
+        if self.ttl_s is not None and self.ttl_s <= 0:
+            raise ValueError(f"CacheSpec.ttl_s must be None or > 0, "
+                             f"got {self.ttl_s}")
+
+    def with_(self, **overrides) -> "CacheSpec":
+        return replace(self, **overrides)
+
+
+@dataclass(frozen=True)
 class SearchOptions:
     """Online per-batch options; one instance drives every backend.
 

@@ -102,36 +102,80 @@ def take_programs(programs: dict, idx: np.ndarray) -> dict:
 
 def execute(backend, queries, filters, opts: SearchOptions) -> SearchResult:
     """Run one filtered-ANNS batch through ``backend`` (paper Fig. 1 online
-    phase): estimate -> route -> per-route execution -> reassembly."""
+    phase): result-cache fast path -> estimate -> route -> per-route
+    execution -> reassembly.
+
+    Backends may optionally implement two duck-typed hooks (the cache
+    subsystem's ``CachingBackend`` does; plain backends need neither):
+
+      lookup_result(queries, programs, opts) -> None | {"hit": (B,) bool,
+          "ids"/"dists"/"p_hat"/"routed_brute": hit-row arrays}
+          served *before* estimation, so a hit skips the whole pipeline.
+      record_result(queries, programs, opts, ids, dists, p_hat, routed_brute)
+          called with the freshly computed miss rows after execution.
+    """
     backend.validate(opts)
     queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
     b = queries.shape[0]
     programs = compile_programs(filters, backend.schema, b)
 
     t0 = time.perf_counter()
-    p_hat = np.asarray(backend.estimate(programs))
-    plan = plan_routes(p_hat, backend.sel_cfg.lam, opts.force)
-
     ids = np.full((b, opts.k), -1, np.int64)
     dists = np.full((b, opts.k), np.inf, np.float32)
+    p_hat = np.zeros((b,), np.float32)
+    routed_brute = np.zeros((b,), bool)
     hops = np.zeros((b,), np.int64)
     path_td = np.zeros((b,), np.int64)
 
-    gi, bi = plan.graph_idx, plan.brute_idx
-    if len(gi):
-        out = backend.search_graph(queries[gi], take_programs(programs, gi),
-                                   jnp.asarray(p_hat[gi]), opts)
-        ids[gi] = np.asarray(out["ids"])
-        dists[gi] = np.asarray(out["dists"])
-        hops[gi] = np.asarray(out.get("hops", np.zeros(len(gi), np.int64)))
-        path_td[gi] = np.asarray(out.get("path_td",
-                                         np.zeros(len(gi), np.int64)))
-    if len(bi):
-        bid, bd = backend.search_brute(queries[bi], take_programs(programs, bi),
-                                       opts)
-        ids[bi] = np.asarray(bid)
-        dists[bi] = np.asarray(bd)
+    lookup = getattr(backend, "lookup_result", None)
+    cached = lookup(np.asarray(queries), programs, opts) if lookup else None
+    if cached is not None:
+        hi = np.nonzero(np.asarray(cached["hit"], bool))[0]
+        ids[hi] = np.asarray(cached["ids"])
+        dists[hi] = np.asarray(cached["dists"])
+        p_hat[hi] = np.asarray(cached["p_hat"])
+        routed_brute[hi] = np.asarray(cached["routed_brute"])
+        miss = np.nonzero(~np.asarray(cached["hit"], bool))[0]
+    else:
+        miss = np.arange(b)
+
+    if len(miss):
+        # avoid re-slicing (device round-trips) when a sub-batch is the
+        # whole batch -- the common case for plain (hook-less) backends
+        full = len(miss) == b
+        mq = queries if full else queries[miss]
+        mprogs = programs if full else take_programs(programs, miss)
+        mp_hat = np.asarray(backend.estimate(mprogs))
+        plan = plan_routes(mp_hat, backend.sel_cfg.lam, opts.force)
+        p_hat[miss] = plan.p_hat
+        routed_brute[miss] = plan.brute
+
+        gi, bi = plan.graph_idx, plan.brute_idx
+        if len(gi):
+            whole = len(gi) == len(miss)
+            out = backend.search_graph(
+                mq if whole else mq[gi],
+                mprogs if whole else take_programs(mprogs, gi),
+                jnp.asarray(mp_hat if whole else mp_hat[gi]), opts)
+            ids[miss[gi]] = np.asarray(out["ids"])
+            dists[miss[gi]] = np.asarray(out["dists"])
+            hops[miss[gi]] = np.asarray(out.get("hops",
+                                                np.zeros(len(gi), np.int64)))
+            path_td[miss[gi]] = np.asarray(
+                out.get("path_td", np.zeros(len(gi), np.int64)))
+        if len(bi):
+            whole = len(bi) == len(miss)
+            bid, bd = backend.search_brute(
+                mq if whole else mq[bi],
+                mprogs if whole else take_programs(mprogs, bi), opts)
+            ids[miss[bi]] = np.asarray(bid)
+            dists[miss[bi]] = np.asarray(bd)
+
+        record = getattr(backend, "record_result", None)
+        if record is not None:
+            record(np.asarray(mq), mprogs, opts, ids[miss], dists[miss],
+                   mp_hat, plan.brute)
     # the np.asarray conversions above already synced the device work
     elapsed = time.perf_counter() - t0
-    return SearchResult(ids, dists, plan.p_hat, plan.brute, hops, path_td,
+    return SearchResult(ids, dists, p_hat, routed_brute, hops, path_td,
                         elapsed)

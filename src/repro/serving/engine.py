@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import time
 import warnings
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -63,6 +64,7 @@ class ServeEngine:
 
     def __init__(self, backend, opts: SearchOptions | None = None, *,
                  max_batch: int = 256, max_wait_ms: float = 2.0,
+                 latency_window: int = 4096,
                  k: int | None = None, ef: int | None = None,
                  use_pq: bool | None = None):
         if isinstance(backend, FavorIndex):
@@ -91,10 +93,31 @@ class ServeEngine:
         backend.validate(self.opts)
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
+        if latency_window < 1:
+            raise ValueError(f"latency_window must be >= 1, "
+                             f"got {latency_window}")
         self.queue: list[Request] = []
-        self.stats = {"graph": 0, "brute": 0, "batches": 0}
-        self.latencies: list[float] = []
+        self._counters = {"graph": 0, "brute": 0, "batches": 0}
+        # bounded rolling window: long-running engines must not grow memory
+        # with request count (percentiles are over the last N requests)
+        self.latencies: deque[float] = deque(maxlen=latency_window)
         self._next_rid = 0
+
+    @property
+    def stats(self) -> dict:
+        """Routing counters, plus the backend's per-layer cache hit/miss/
+        bypass counters when it is cache-capable (CachingBackend)."""
+        out = dict(self._counters)
+        cache_stats = getattr(self.backend, "cache_stats", None)
+        if cache_stats is not None:
+            out["cache"] = cache_stats()
+        return out
+
+    def reset_stats(self) -> None:
+        """Zero the routing counters and drop the latency window (cached
+        *entries* survive; use backend.clear() to drop those too)."""
+        self._counters = {"graph": 0, "brute": 0, "batches": 0}
+        self.latencies.clear()
 
     @property
     def k(self) -> int:
@@ -131,7 +154,7 @@ class ServeEngine:
         if not self.queue or not (force or self._due()):
             return []
         batch = self._assemble()
-        self.stats["batches"] += 1
+        self._counters["batches"] += 1
         queries = np.stack([r.query for r in batch])
         flts = [r.flt for r in batch]
         # bucket-pad so each (route, size) pair reuses a compiled program
@@ -145,7 +168,7 @@ class ServeEngine:
         out = []
         for i, r in enumerate(batch):
             route = "brute" if res.routed_brute[i] else "graph"
-            self.stats[route] += 1
+            self._counters[route] += 1
             lat = t_done - r.t_submit
             self.latencies.append(lat)
             out.append(Response(r.rid, res.ids[i], res.dists[i], route,

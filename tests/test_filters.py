@@ -128,3 +128,58 @@ def test_property_program_matches_ast(flt):
     m = F.eval_program(prog, attrs.ints, attrs.floats)
     expect = np.array([F.eval_filter_python(flt, attrs.row(i)) for i in range(attrs.n)])
     np.testing.assert_array_equal(m, expect)
+
+
+# -- property: canonical signatures (cache keys) -----------------------------
+def _equivalent_rewrite(f):
+    """A semantically identical AST: AND/OR children reversed recursively,
+    leaves double-negated."""
+    if isinstance(f, F.And):
+        return F.And(*[_equivalent_rewrite(c) for c in reversed(f.children)])
+    if isinstance(f, F.Or):
+        return F.Or(*[_equivalent_rewrite(c) for c in reversed(f.children)])
+    if isinstance(f, F.Not):
+        return F.Not(_equivalent_rewrite(f.child))
+    return F.Not(F.Not(f))
+
+
+@settings(max_examples=60, deadline=None)
+@given(filter_trees())
+def test_property_signature_invariant_under_equivalence(flt):
+    """Reordered conjuncts/disjuncts, double negation, duplicated or
+    absorbed disjuncts, and AND/OR identities all share one signature."""
+    try:
+        sig = F.filter_signature(flt, SCHEMA, width=16)
+        variants = [
+            _equivalent_rewrite(flt),
+            F.Not(F.Not(flt)),
+            F.Or(flt, flt),
+            F.Or(flt, F.FalseFilter()),
+            F.And(flt, F.TrueFilter()),
+            F.And(flt, flt),
+        ]
+        for v in variants:
+            assert F.filter_signature(v, SCHEMA, width=16) == sig
+    except ValueError:
+        return  # DNF width overflow is allowed to raise
+
+
+@settings(max_examples=60, deadline=None)
+@given(filter_trees(), filter_trees())
+def test_property_equal_signature_implies_equal_semantics(f1, f2):
+    """Soundness: equal signatures must evaluate identically on every row
+    (a cache key collision would silently serve wrong results)."""
+    try:
+        s1 = F.filter_signature(f1, SCHEMA, width=16)
+        s2 = F.filter_signature(f2, SCHEMA, width=16)
+        p1 = F.compile_filter(f1, SCHEMA, width=16)
+        p2 = F.compile_filter(f2, SCHEMA, width=16)
+    except ValueError:
+        return
+    attrs = F.random_attributes(SCHEMA, 300, seed=43)
+    m1 = F.eval_program(p1, attrs.ints, attrs.floats)
+    m2 = F.eval_program(p2, attrs.ints, attrs.floats)
+    if s1 == s2:
+        np.testing.assert_array_equal(m1, m2)
+    elif not np.array_equal(m1, m2):
+        assert s1 != s2  # contrapositive (always true here; documents intent)
