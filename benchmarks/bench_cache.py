@@ -10,8 +10,17 @@ Zipf exponent (skew -> hit rate).
 Reported per sweep point: QPS (both engines), speedup, p99 latency, per-layer
 hit rates, Recall@10 of both engines against exact ground truth, and the
 fraction of requests where cached ids differ from uncached (must be 0: every
-layer is exact at the default CacheSpec).  Emits ``bench_out/cache.csv`` plus
-the stable cross-PR serving summary ``bench_out/BENCH_serve.json``.
+layer is exact at the default CacheSpec).
+
+A second sweep measures the **semantic-threshold trade**: the same
+repeat-heavy stream with near-duplicate (jittered) query vectors driven at
+``semantic_threshold`` in {0, 0.05, 0.1, 0.2}, reporting the semantic hit
+rate, QPS and recall@10 delta vs the lossless threshold-0 run per point --
+the ROADMAP follow-up that finally *measures* what threshold > 0 costs.
+
+Emits ``bench_out/cache.csv``, ``bench_out/cache_thresholds.csv`` and the
+``cache`` section of the stable cross-PR summary
+``bench_out/BENCH_serve.json``.
 
 CLI: ``python -m benchmarks.bench_cache [--quick] [--smoke]`` (--smoke is the
 CI mode: tiny corpus, one sweep point, asserts the acceptance invariants).
@@ -19,8 +28,6 @@ CI mode: tiny corpus, one sweep point, asserts the acceptance invariants).
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import numpy as np
@@ -33,6 +40,7 @@ from repro.serving import ServeEngine
 from . import common
 
 SKEWS = (0.0, 1.0, 1.4, 2.0)  # Zipf exponents: uniform -> heavily skewed
+THRESHOLDS = (0.0, 0.05, 0.1, 0.2)  # semantic L2 match radii
 
 
 def _filter_pool(schema, n_filters: int, rng) -> list:
@@ -77,6 +85,69 @@ def _recall(responses, pair_ids, truth, k: int) -> float:
     per = [refimpl.recall_at_k(np.asarray(r.ids), truth[pid], k)
            for r, pid in zip(responses, pair_ids) if pid in truth]
     return float(np.mean(per)) if per else 0.0
+
+
+def _threshold_sweep(fi, vecs, attrs, schema, qpool, fpool, opts,
+                     n_requests: int, max_batch: int, k: int,
+                     gt_cap: int, rng) -> tuple[list[dict], float]:
+    """Recall-vs-threshold sweep for the semantic layer; returns the per-
+    threshold rows plus the uncached recall baseline the deltas are
+    measured against.
+
+    The stream repeats (query, filter) pairs Zipf-style, but half the
+    repeats carry a *jittered* copy of the pool query (sigma tuned so the
+    L2 distance between two jitters of the same base lands around 0.1 for
+    any dim): threshold 0 serves only exact repeats (lossless by
+    construction), larger thresholds also serve the near-duplicates and pay
+    whatever recall that costs -- which is exactly what each sweep point
+    measures, as recall@10 against per-request exact ground truth.
+    """
+    dim = vecs.shape[1]
+    sigma = 0.07 / np.sqrt(2.0 * dim)  # pairwise jitter distance ~ 0.07
+    pairs = [(qi, fj) for qi in range(len(qpool)) for fj in range(len(fpool))]
+    pair_ids = _zipf_requests(len(pairs), n_requests, 1.2,
+                              np.random.default_rng(common.SEED + 23))
+    jitter = rng.integers(0, 2, size=n_requests).astype(bool)
+    reqs = []
+    for r, pid in enumerate(pair_ids):
+        qi, fj = pairs[pid]
+        q = np.asarray(qpool[qi], np.float32)
+        if jitter[r]:
+            q = (q + rng.normal(scale=sigma, size=dim)).astype(np.float32)
+        reqs.append((q, fpool[fj]))
+
+    masks = {fj: np.asarray(F.eval_program(F.compile_filter(f, schema),
+                                           attrs.ints, attrs.floats))
+             for fj, f in enumerate(fpool)}
+    gt_rows = range(min(gt_cap, n_requests))
+    truth = {r: refimpl.bruteforce_filtered(
+        vecs, masks[pairs[pair_ids[r]][1]], reqs[r][0], k)[0]
+        for r in gt_rows}
+
+    def _recall(responses) -> float:
+        return float(np.mean([refimpl.recall_at_k(np.asarray(
+            responses[r].ids), truth[r], k) for r in gt_rows]))
+
+    base = LocalBackend(fi)
+    _drive(base, reqs, opts, max_batch)                   # warm/compile
+    _, out_u, _, _ = _drive(base, reqs, opts, max_batch)
+    uncached_recall = _recall(out_u)  # the true lossless baseline
+
+    rows = []
+    for t in THRESHOLDS:
+        spec = CacheSpec(semantic_threshold=t)
+        _drive(CachingBackend(base, spec), reqs, opts, max_batch)  # warm
+        eng, out, qps, p99 = _drive(CachingBackend(base, spec), reqs, opts,
+                                    max_batch)
+        st = eng.stats["cache"]
+        rows.append({
+            "threshold": t,
+            "hit_rate_semantic": st["semantic"]["hit_rate"],
+            "qps": qps, "p99_ms": p99,
+            "recall": _recall(out),
+            "recall_delta": _recall(out) - uncached_recall,
+        })
+    return rows, uncached_recall
 
 
 def run(quick: bool = False, smoke: bool = False) -> str:
@@ -157,26 +228,47 @@ def run(quick: bool = False, smoke: bool = False) -> str:
         csv.add(*[row[h] for h in csv.rows[0]])
     csv.write()
 
+    # -- semantic threshold sweep (recall-vs-QPS trade per threshold) --------
+    trows, t_base_recall = _threshold_sweep(fi, vecs, attrs, schema, qpool,
+                                            fpool, opts, n_requests,
+                                            max_batch, k, gt_cap, rng)
+    tcsv = common.Csv("cache_thresholds.csv",
+                      ["threshold", "hit_rate_semantic", "qps", "p99_ms",
+                       "recall", "recall_delta"])
+    for row in trows:
+        tcsv.add(*[row[h] for h in tcsv.rows[0]])
+    tcsv.write()
+
     summary = {
-        "bench": "serve_cache",
         "config": {"n": n, "dim": dim, "requests": n_requests,
                    "query_pool": len(qpool), "filter_pool": n_filters,
                    "k": k, "max_batch": max_batch},
         "points": points,
         "headline": max(points, key=lambda r: r["speedup"]),
+        "threshold_sweep": trows,
+        "threshold_uncached_recall": t_base_recall,
     }
-    os.makedirs("bench_out", exist_ok=True)
-    path = os.path.join("bench_out", "BENCH_serve.json")
-    with open(path, "w") as f:
-        json.dump(summary, f, indent=2, sort_keys=True)
+    path = common.update_bench_json("cache", summary)
 
     head = summary["headline"]
     if smoke:
         assert head["mismatch_frac"] == 0.0, \
             f"cached results diverged: {head['mismatch_frac']}"
         assert head["recall_cached"] >= head["recall_uncached"] - 1e-9
+        assert trows[0]["threshold"] == 0.0
+        # threshold 0 serves exact repeats only -> recall must equal the
+        # UNCACHED baseline on the same stream (lossless), not merely
+        # itself: deltas are measured against that independent run
+        assert abs(trows[0]["recall"] - t_base_recall) < 1e-9, \
+            (trows[0]["recall"], t_base_recall)
+        # larger radii must not serve fewer semantic hits on this stream
+        assert trows[-1]["hit_rate_semantic"] >= \
+            trows[0]["hit_rate_semantic"] - 1e-9
+    tmax = trows[-1]
     return (f"speedup={head['speedup']:.2f}x@skew={head['skew']} "
-            f"sem_hit={head['hit_rate_semantic']:.2f} {path}")
+            f"sem_hit={head['hit_rate_semantic']:.2f} | thr{tmax['threshold']}"
+            f": hit={tmax['hit_rate_semantic']:.2f} "
+            f"dRecall={tmax['recall_delta']:+.3f} {path}")
 
 
 def main() -> None:

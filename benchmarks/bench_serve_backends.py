@@ -7,26 +7,40 @@ p50/p99 latency and the bytes-per-vector accounting that verifies the brute
 route actually streams codes (not float32) when a QuantSpec is set:
 scan_bytes = N * bytes_per_vector is the per-query bandwidth bound.
 
+It then runs the **shape-stable serving sweep**: the same mixed-selectivity
+stream submitted in random-size bursts (so the selector's gi/bi sub-batches
+take data-dependent sizes every batch) against a cold unpadded engine vs a
+``SearchOptions(batch=BatchSpec(...))`` engine that ``warmup()``s its bucket
+ladder first.  Reported per arm: p99 (cold traffic -- the unpadded arm pays
+its compiles inline, which is exactly the production spike), compiled-shape
+counts from the engine registry, pad overhead, and a result-parity check.
+The sweep lands in the ``batching`` section of bench_out/BENCH_serve.json.
+
 The model axis spans every visible device (1 on the CI CPU; S-way sharded
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=S``).
 
     PYTHONPATH=src python -m benchmarks.run --only serve_backends [--quick]
+    PYTHONPATH=src python -m benchmarks.bench_serve_backends --smoke   # CI:
+        asserts compiled shapes <= bucket ladder, padded/unpadded parity,
+        and use_pallas working under ShardedBackend
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import numpy as np
 
 from repro.configs.favor_anns import FavorServeConfig
-from repro.core import FavorIndex, HnswParams, LocalBackend, ShardedBackend
+from repro.core import (BatchSpec, FavorIndex, HnswParams, LocalBackend,
+                        ShardedBackend, router)
 from repro.core import filters as F
 from repro.core.distributed import largest_divisor
 from repro.data import synthetic
 from repro.serving import ServeEngine
 
-from .common import DIM, N, NQ, SEED, Csv
+from .common import DIM, N, NQ, SEED, Csv, update_bench_json
 
 
 def _workload(schema, dim, n_requests, seed=0):
@@ -57,9 +71,96 @@ def _drive(backend, opts, requests, max_batch=128):
             pct.get("p99", 0.0), eng.stats)
 
 
-def run(quick: bool = False) -> str:
-    n, dim = (4096, DIM) if quick else (max(4096, N // 2), DIM)
-    n_requests = 64 if quick else min(256, NQ * 2)
+def _burst_drive(backend, opts, requests, *, max_batch: int,
+                 burst_seed: int = 123):
+    """Drive ``requests`` in random-size bursts so every batch has a fresh
+    data-dependent (graph, brute) split -- the shape-churn workload.  Cold
+    by construction: the engine is built here, so any compile the stream
+    triggers lands inside the measured latencies (a bucketed engine
+    pre-warms its ladder; an unpadded one cannot -- its shape set is
+    unbounded).  The padded arm still pays one-time eager-op glue compiles
+    (sub-batch gathers/concats at raw sizes) in its first batches; the
+    *executable* set -- the expensive traces -- is bounded by the ladder,
+    which is what the registry counts and the smoke guard asserts."""
+    eng = ServeEngine(backend, opts, max_batch=max_batch)
+    if opts.batch is not None:
+        eng.warmup()
+        eng.reset_stats()
+    rng = np.random.default_rng(burst_seed)
+    out = []
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(requests):
+        burst = int(rng.integers(1, max_batch + 1))
+        for q, flt in requests[i:i + burst]:
+            eng.submit(q, flt)
+        out.extend(eng.step(force=True))
+        i += burst
+    wall = time.perf_counter() - t0
+    out.sort(key=lambda r: r.rid)
+    pct = eng.latency_percentiles()
+    return eng, out, {
+        "qps": len(out) / max(wall, 1e-12),
+        "p50_ms": pct.get("p50", 0.0), "p99_ms": pct.get("p99", 0.0),
+        "compiled_shapes": eng.stats["batching"]["compiled_shapes"],
+        "sizes": eng.stats["batching"]["sizes"],
+        "pad_overhead": eng.stats["batching"]["pad_overhead"],
+    }
+
+
+def _p99_sweep(grid, requests, spec: BatchSpec, max_batch: int):
+    """(name, backend, opts) grid -> per-backend padded/unpadded points
+    plus a row-level parity check between the two arms."""
+    points = []
+    for name, backend, opts in grid:
+        _, out_u, m_u = _burst_drive(backend, opts, requests,
+                                     max_batch=max_batch)
+        _, out_p, m_p = _burst_drive(backend, opts.with_(batch=spec),
+                                     requests, max_batch=max_batch)
+        mismatch = float(np.mean([not np.array_equal(a.ids, b.ids)
+                                  for a, b in zip(out_u, out_p)]))
+        points.append({
+            "backend": name, "unpadded": m_u, "padded": m_p,
+            "mismatch_frac": mismatch,
+            "p99_ratio": m_p["p99_ms"] / max(m_u["p99_ms"], 1e-12),
+        })
+    return points
+
+
+def _assert_smoke(points, shard, requests, spec: BatchSpec, opts):
+    """CI acceptance: bounded compiled shapes, exact parity, and the Pallas
+    brute scan working inside the sharded shard_map path."""
+    ladder = set(spec.buckets())
+    for pt in points:
+        assert pt["mismatch_frac"] == 0.0, \
+            f"{pt['backend']}: padded results diverged ({pt['mismatch_frac']})"
+        sizes = pt["padded"]["sizes"]
+        for kind, seen in sizes.items():
+            extra = set(seen) - ladder
+            assert not extra, \
+                f"{pt['backend']}/{kind}: shapes {extra} escaped the ladder"
+            assert len(seen) <= len(ladder), (kind, seen)
+        # the unpadded arm compiles one executable per distinct split size;
+        # the padded arm is bounded by the ladder
+        assert pt["padded"]["compiled_shapes"] <= 3 * len(ladder), pt
+    qs = np.stack([q for q, _ in requests[:8]])
+    flts = [flt for _, flt in requests[:8]]
+    brute = opts.with_(force="brute")
+    rn = router.execute(shard, qs, flts, brute)
+    rp = router.execute(shard, qs, flts, brute.with_(use_pallas=True))
+    for i in range(len(qs)):  # sets: kernel may swap exact-tie ids
+        assert set(rn.ids[i]) == set(rp.ids[i]), i
+    rpb = router.execute(shard, qs, flts,
+                         brute.with_(use_pallas=True, batch=spec))
+    assert np.array_equal(rp.ids, rpb.ids)
+
+
+def run(quick: bool = False, smoke: bool = False) -> str:
+    if smoke:
+        quick = True
+    n, dim = (2048, 16) if smoke else ((4096, DIM) if quick
+                                       else (max(4096, N // 2), DIM))
+    n_requests = 48 if smoke else (64 if quick else min(256, NQ * 2))
     vecs, attrs, schema = synthetic.make_paper_dataset(n, dim, seed=SEED)
     requests = _workload(schema, dim, n_requests, seed=3)
 
@@ -73,6 +174,16 @@ def run(quick: bool = False) -> str:
     mesh = jax.make_mesh((1, n_model), ("data", "model"))
     shard = ShardedBackend.build(vecs, attrs, mesh, spec,
                                  codebook=local.index.codebook, seed=SEED)
+
+    # -- shape-stable serving sweep FIRST: the unpadded arm must be cold
+    # (driving the grid beforehand would pre-compile many of the very
+    # (route, size) executables whose inline compiles it measures) --------
+    spec = BatchSpec(min_bucket=8, max_bucket=16 if smoke else 64)
+    sweep_batch = 16 if smoke else 64
+    sweep_reqs = _workload(schema, dim, n_requests, seed=17)
+    points = _p99_sweep([("local", local, opts_f32),
+                         ("sharded", shard, opts_f32)],
+                        sweep_reqs, spec, sweep_batch)
 
     bpv_f32 = local.index.bytes_per_vector()
     bpv_pq = local.index.bytes_per_vector(quantized=True)
@@ -92,9 +203,48 @@ def run(quick: bool = False) -> str:
                 stats["graph"], stats["brute"], float(bpv), float(bpv * n))
         summary.append(f"{name}{'_pq' if opts.use_pq else '_f32'}={qps:.0f}")
     path = csv.write()
+
+    pcsv = Csv("serve_batching.csv",
+               ["backend", "padded", "qps", "p50_ms", "p99_ms",
+                "compiled_shapes", "pad_overhead", "mismatch_frac"])
+    for pt in points:
+        for arm in ("unpadded", "padded"):
+            m = pt[arm]
+            pcsv.add(pt["backend"], int(arm == "padded"), m["qps"],
+                     m["p50_ms"], m["p99_ms"], m["compiled_shapes"],
+                     m["pad_overhead"], pt["mismatch_frac"])
+    pcsv.write()
+    jpath = update_bench_json("batching", {
+        "config": {"n": n, "dim": dim, "requests": n_requests,
+                   "max_batch": sweep_batch, "buckets": list(spec.buckets()),
+                   "shards": n_model},
+        "points": points,
+    })
+    if smoke:
+        _assert_smoke(points, shard, sweep_reqs, spec, opts_f32)
+
+    sp = points[-1]  # sharded point
     return (f"shards={n_model} compression={bpv_f32 / bpv_pq:.1f}x "
-            + " ".join(summary) + f" csv={path}")
+            + " ".join(summary)
+            + f" | batching: shapes {sp['unpadded']['compiled_shapes']}->"
+              f"{sp['padded']['compiled_shapes']} "
+              f"p99 {sp['unpadded']['p99_ms']:.1f}->"
+              f"{sp['padded']['p99_ms']:.1f}ms "
+              f"pad={sp['padded']['pad_overhead']:.2f} json={jpath}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    # direct module invocation has always been the quick run; the
+    # full-size corpus stays reachable via --full or benchmarks.run
+    ap.add_argument("--full", action="store_true",
+                    help="full-size corpus (default: quick)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny corpus, assert the compile-regression"
+                         " guard, padded parity and sharded use_pallas")
+    args = ap.parse_args()
+    print(run(quick=not args.full, smoke=args.smoke))
 
 
 if __name__ == "__main__":
-    print(run(quick=True))
+    main()

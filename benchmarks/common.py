@@ -1,6 +1,7 @@
 """Shared benchmark harness: cached index builds, ground truth, timing."""
 from __future__ import annotations
 
+import json
 import os
 import pickle
 import time
@@ -50,6 +51,32 @@ def get_index(n: int = N, dim: int = DIM, seed: int = SEED,
     with open(path, "wb") as f:
         pickle.dump(fi.index, f)
     return fi
+
+
+def update_bench_json(section: str, payload: dict,
+                      name: str = "BENCH_serve.json",
+                      outdir: str = "bench_out") -> str:
+    """Merge one benchmark's summary into the stable cross-PR serving JSON.
+
+    Multiple benchmarks (bench_cache, bench_serve_backends) contribute
+    sections to the same file; read-modify-write keeps them from clobbering
+    each other.  A pre-section-layout file (one flat summary) is reset.
+    """
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, name)
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except ValueError:
+            data = {}
+    if not isinstance(data, dict) or "bench" in data:
+        data = {}  # legacy single-section layout: start fresh
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    return path
 
 
 def ground_truth(vecs, mask, queries, k: int = 10):

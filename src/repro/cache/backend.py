@@ -24,6 +24,7 @@ import time
 
 import numpy as np
 
+from ..core import batching
 from ..core import filters as F
 from ..core.options import CacheSpec, SearchOptions
 from ..core.router import take_programs
@@ -69,14 +70,23 @@ class CachingBackend:
         # lazy: resolved on the first brute batch that can use it, so
         # wrapping a backend never materializes a corpus view it won't need
         self._corpus_view = None
-        # two-slot signature memo: router.execute hands the *same*
-        # program-dict object to lookup_result, estimate and record_result
-        # whenever the sub-batch is the whole batch, with at most one route
-        # sub-batch dict in between -- two slots cover the full call chain
-        # (the held references keep the identity-keys valid)
+        # signature memo keyed on program-array identity: router.execute
+        # hands the *same* program-dict object to lookup_result, estimate
+        # and record_result whenever the sub-batch is the whole batch, but
+        # with bucket padding up to three distinct padded dicts (estimate,
+        # graph, brute) sit between the first and last use of the original
+        # -- four slots keep the full call chain memoized (the held
+        # references keep the identity-keys valid)
         self._sig_memo: list = []
         self._epoch = inner.version()
         self.invalidations = 0
+        # the live BatchSpec, captured in validate() (which router.execute
+        # calls before every batch): the cache split re-introduces
+        # data-dependent miss counts, so inner estimate/brute calls are
+        # re-bucketed with the SAME ladder the caller padded (and warmup()
+        # compiled) with -- a private default here would compile shapes
+        # warmup never covered
+        self._batch = None
 
     # -- Backend protocol (delegated identity) -------------------------------
     @property
@@ -88,6 +98,7 @@ class CachingBackend:
         return self.inner.sel_cfg
 
     def validate(self, opts: SearchOptions) -> None:
+        self._batch = opts.batch
         self.inner.validate(opts)
 
     def version(self) -> int:
@@ -136,7 +147,7 @@ class CachingBackend:
                 return sigs
         sigs = F.batch_signatures(programs)
         self._sig_memo.insert(0, (vals, sigs))
-        del self._sig_memo[2:]
+        del self._sig_memo[4:]
         return sigs
 
     # -- semantic layer: router fast-path hooks -------------------------------
@@ -183,35 +194,46 @@ class CachingBackend:
                                     float(p_hat[i]), bool(routed_brute[i]))
 
     # -- selectivity layer ----------------------------------------------------
-    def estimate(self, programs: dict):
+    def estimate(self, programs: dict, valid=None):
         self._sync_epoch()
         sigs = self._signatures(programs)
         b = len(sigs)
-        p_hat = np.empty((b,), np.float32)
+        # pad rows (valid False) never touch the cache: no phantom
+        # always-false entries, no inflated hit/miss counters (same
+        # hygiene as search_brute); their p_hat is 0, sliced off upstream
+        real = (range(b) if valid is None
+                else np.nonzero(np.asarray(valid, bool))[0])
+        p_hat = np.zeros((b,), np.float32)
         first_row: dict[str, int] = {}   # sig -> first miss row
-        for i, sig in enumerate(sigs):
-            cached = self.selectivity_cache.get(sig)
+        for i in real:
+            cached = self.selectivity_cache.get(sigs[i])
             if cached is not None:
                 p_hat[i] = cached
-            elif sig not in first_row:
-                first_row[sig] = i
+            elif sigs[i] not in first_row:
+                first_row[sigs[i]] = int(i)
         if first_row:
             rows = np.asarray(sorted(first_row.values()), np.int64)
-            fresh = np.asarray(self.inner.estimate(
-                take_programs(programs, rows)), np.float32)
+            sub = take_programs(programs, rows)
+            if self._batch is None:
+                fresh = np.asarray(self.inner.estimate(sub), np.float32)
+            else:
+                sub, sub_valid = batching.pad_programs(self._batch, sub)
+                fresh = np.asarray(self.inner.estimate(sub, valid=sub_valid),
+                                   np.float32)[:len(rows)]
             by_sig = {sigs[r]: fresh[j] for j, r in enumerate(rows)}
             for sig, p in by_sig.items():
                 self.selectivity_cache.put(sig, float(p))
-            for i, sig in enumerate(sigs):
-                if sig in by_sig:
-                    p_hat[i] = by_sig[sig]
+            for i in real:
+                if sigs[i] in by_sig:
+                    p_hat[i] = by_sig[sigs[i]]
         return p_hat
 
     # -- graph route: pass-through --------------------------------------------
     def search_graph(self, queries, programs: dict, p_hat,
-                     opts: SearchOptions) -> dict:
+                     opts: SearchOptions, valid=None) -> dict:
         self._sync_epoch()
-        return self.inner.search_graph(queries, programs, p_hat, opts)
+        return self.inner.search_graph(queries, programs, p_hat, opts,
+                                       valid=valid)
 
     # -- candidate layer: brute route -----------------------------------------
     def _extension(self, programs: dict, row: int) -> np.ndarray:
@@ -235,42 +257,68 @@ class CachingBackend:
         ids = np.full((len(queries), k), -1, np.int64)
         out = np.full((len(queries), k), np.inf, np.float32)
         kk = min(k, c)
-        part = np.argpartition(dist, kk - 1, axis=1)[:, :kk]
-        pd = np.take_along_axis(dist, part, axis=1)
-        order = np.argsort(pd, axis=1, kind="stable")
-        ids[:, :kk] = cand[np.take_along_axis(part, order, axis=1)]
-        out[:, :kk] = np.take_along_axis(pd, order, axis=1)
+        if kk:  # an always-false predicate has an empty (legal) extension
+            part = np.argpartition(dist, kk - 1, axis=1)[:, :kk]
+            pd = np.take_along_axis(dist, part, axis=1)
+            order = np.argsort(pd, axis=1, kind="stable")
+            ids[:, :kk] = cand[np.take_along_axis(part, order, axis=1)]
+            out[:, :kk] = np.take_along_axis(pd, order, axis=1)
         return ids, out
 
-    def search_brute(self, queries, programs: dict, opts: SearchOptions):
+    def _inner_brute(self, queries_np, programs: dict, rows,
+                     opts: SearchOptions):
+        """Run the inner brute scan on a row subset, re-bucketing the
+        sub-batch when ``opts.batch`` is set: the cache split re-introduces
+        data-dependent miss counts, so shape stability must be restored
+        before the (compiled) inner call."""
+        sub_q = queries_np[rows]
+        sub_p = take_programs(programs, rows)
+        if opts.batch is None:
+            mid, md = self.inner.search_brute(sub_q, sub_p, opts)
+        else:
+            sub_q, sub_p, _, sub_valid = batching.pad_to_bucket(
+                opts.batch, sub_q, sub_p)
+            mid, md = self.inner.search_brute(sub_q, sub_p, opts,
+                                              valid=sub_valid)
+        return np.asarray(mid)[:len(rows)], np.asarray(md)[:len(rows)]
+
+    def search_brute(self, queries, programs: dict, opts: SearchOptions,
+                     valid=None):
         self._sync_epoch()
+        b = int(queries.shape[0])
+        # this layer is host-side: pad rows (valid False) are dropped here
+        # and the inner compiled call is re-bucketed in _inner_brute, so
+        # they never pollute signatures, counters or admission
+        real = (np.arange(b) if valid is None
+                else np.nonzero(np.asarray(valid, bool))[0])
         # a compressed (ADC) scan is not the exact-distance computation the
         # candidate block runs, so use_pq bypasses this layer entirely
         serveable = (self.candidate_cache.enabled and not opts.use_pq
                      and self._corpus() is not None)
         if not serveable:
             if self.candidate_cache.enabled:
-                self.candidate_cache.bypasses += int(queries.shape[0])
-            return self.inner.search_brute(queries, programs, opts)
+                self.candidate_cache.bypasses += int(len(real))
+            return self.inner.search_brute(queries, programs, opts,
+                                           valid=valid)
 
         queries_np = np.asarray(queries, np.float32)
         sigs = self._signatures(programs)
-        b = len(sigs)
         ids = np.full((b, opts.k), -1, np.int64)
         dists = np.full((b, opts.k), np.inf, np.float32)
 
         hit_rows: dict[str, list[int]] = {}
         blocks: dict[str, np.ndarray] = {}
         miss: list[int] = []
-        for i, sig in enumerate(sigs):
+        for i in real:
+            sig = sigs[i]
             # one get() per ROW (not per unique signature) so the reported
             # hit/miss counters reflect served lookups, not distinct keys
             cand = self.candidate_cache.get(sig)
             if cand is None:
-                miss.append(i)
+                miss.append(int(i))
                 continue
             blocks[sig] = cand
-            hit_rows.setdefault(sig, []).append(i)
+            hit_rows.setdefault(sig, []).append(int(i))
 
         for sig, rows in hit_rows.items():
             rid, rd = self._scan_block(queries_np[rows], blocks[sig], opts.k)
@@ -279,10 +327,9 @@ class CachingBackend:
 
         if miss:
             rows = np.asarray(miss, np.int64)
-            mid, md = self.inner.search_brute(
-                queries_np[rows], take_programs(programs, rows), opts)
-            ids[rows] = np.asarray(mid)
-            dists[rows] = np.asarray(md)
+            mid, md = self._inner_brute(queries_np, programs, rows, opts)
+            ids[rows] = mid
+            dists[rows] = md
             n_rows = self._corpus()[0].shape[0]
             miss_first: dict[str, int] = {}  # one reference per sig per batch
             for i in miss:

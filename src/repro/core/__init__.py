@@ -1,5 +1,6 @@
 """FAVOR core: the paper's contribution as a composable JAX library."""
-from . import exclusion, filters, prefbf, refimpl, router, selectivity, selector
+from . import batching, exclusion, filters, prefbf, refimpl, router, selectivity, selector
+from .batching import BatchSpec, ShapeRegistry
 from .favor import FavorIndex
 from .filters import (And, AttributeTable, ColumnSpec, Equality, FalseFilter,
                       Filter, Inclusion, Not, Or, Range, Schema, TrueFilter,
@@ -13,14 +14,15 @@ from .router import RoutePlan, SearchResult
 from .search import SearchConfig, favor_graph_search, graph_arrays, rsf_graph_search
 
 __all__ = [
-    "And", "AttributeTable", "Backend", "BuildSpec", "CacheSpec",
-    "ColumnSpec", "Equality", "FalseFilter", "Filter", "FavorIndex",
-    "HnswIndex", "HnswParams", "Inclusion", "LocalBackend", "Not", "Or",
-    "QuantSpec", "Range", "RoutePlan", "Schema", "SearchConfig",
-    "SearchOptions", "SearchResult", "ShardedBackend", "TrueFilter",
-    "batch_signatures", "build_hnsw", "compile_filter", "exclusion",
-    "favor_graph_search", "filter_signature", "filters", "graph_arrays",
-    "paper_filters", "paper_schema", "prefbf", "program_signature",
-    "random_attributes", "refimpl", "router", "rsf_graph_search",
-    "selectivity", "selector", "stack_programs",
+    "And", "AttributeTable", "Backend", "BatchSpec", "BuildSpec",
+    "CacheSpec", "ColumnSpec", "Equality", "FalseFilter", "Filter",
+    "FavorIndex", "HnswIndex", "HnswParams", "Inclusion", "LocalBackend",
+    "Not", "Or", "QuantSpec", "Range", "RoutePlan", "Schema",
+    "SearchConfig", "SearchOptions", "SearchResult", "ShapeRegistry",
+    "ShardedBackend", "TrueFilter", "batch_signatures", "batching",
+    "build_hnsw", "compile_filter", "exclusion", "favor_graph_search",
+    "filter_signature", "filters", "graph_arrays", "paper_filters",
+    "paper_schema", "prefbf", "program_signature", "random_attributes",
+    "refimpl", "router", "rsf_graph_search", "selectivity", "selector",
+    "stack_programs",
 ]

@@ -17,6 +17,9 @@ Two implementations ship here:
                     sharded compressed brute route: PQ codes are co-sharded
                     with their vectors and each shard runs the ADC LUT scan +
                     exact re-rank before the cross-shard top-k merge.
+                    ``use_pallas=True`` routes each shard's brute scan through
+                    the filtered_topk / pq_adc Pallas kernels inside the
+                    shard_map body (previously LocalBackend-only).
 
 Both expose ``schema`` / ``sel_cfg`` so the router takes identical routing
 decisions regardless of where execution lands, and ``validate(opts)`` so
@@ -44,7 +47,13 @@ if TYPE_CHECKING:
 
 @runtime_checkable
 class Backend(Protocol):
-    """Execution backend contract consumed by router.execute / ServeEngine."""
+    """Execution backend contract consumed by router.execute / ServeEngine.
+
+    The search methods take an optional ``valid`` (B,) bool mask (the
+    bucket-padding contract, core.batching): rows with ``valid=False`` are
+    pad rows -- they carry always-false filter programs, must return
+    ids=-1 / dists=+inf, and must never influence real rows.  ``valid=None``
+    means every row is real (the unpadded path)."""
 
     schema: F.Schema
     sel_cfg: selector.SelectorConfig
@@ -59,16 +68,21 @@ class Backend(Protocol):
         without tracking individual mutations."""
         ...
 
-    def estimate(self, programs: dict):
-        """(B,) estimated selectivity over the backend's sample."""
+    def estimate(self, programs: dict, valid=None):
+        """(B,) estimated selectivity over the backend's sample.  ``valid``
+        marks pad rows exactly as in the search methods; device backends
+        may ignore it (always-false pad programs estimate to 0 and are
+        sliced off), host-side layers (CachingBackend) use it to keep pad
+        rows out of their caches and counters."""
         ...
 
     def search_graph(self, queries, programs: dict, p_hat,
-                     opts: SearchOptions) -> dict:
+                     opts: SearchOptions, valid=None) -> dict:
         """Exclusion-distance graph route; returns at least ids/dists."""
         ...
 
-    def search_brute(self, queries, programs: dict, opts: SearchOptions):
+    def search_brute(self, queries, programs: dict, opts: SearchOptions,
+                     valid=None):
         """PreFBF brute route (float32 or compressed); returns (ids, dists)."""
         ...
 
@@ -90,6 +104,11 @@ class LocalBackend:
     def sel_cfg(self) -> selector.SelectorConfig:
         return self.index.sel_cfg
 
+    @property
+    def dim(self) -> int:
+        """Query vector dimensionality (warmup builds dummy batches off it)."""
+        return int(self.index.index.dim)
+
     def validate(self, opts: SearchOptions) -> None:
         if opts.use_pq and self.index.codebook is None:
             raise ValueError("use_pq=True needs an index built with "
@@ -99,37 +118,41 @@ class LocalBackend:
         """Data epoch of the underlying FavorIndex (see Backend.version)."""
         return self.index.version()
 
-    def estimate(self, programs: dict):
+    def estimate(self, programs: dict, valid=None):
+        # pad rows carry always-false programs (p_hat 0) -- no mask needed
         return selector.estimate_batched(programs, self.index.sample_ints,
                                          self.index.sample_floats)
 
     def search_graph(self, queries, programs: dict, p_hat,
-                     opts: SearchOptions) -> dict:
+                     opts: SearchOptions, valid=None) -> dict:
         idx = self.index
         cfg = opts.search_config()
         D = exclusion.exclusion_distance(
             jnp.asarray(p_hat), opts.ef, idx.delta_d, k=opts.k,
             p_min=idx.sel_cfg.p_min, xp=jnp)
-        return favor_graph_search(idx.g, queries, programs, D, cfg)
+        return favor_graph_search(idx.g, queries, programs, D, cfg,
+                                  valid=valid)
 
-    def search_brute(self, queries, programs: dict, opts: SearchOptions):
+    def search_brute(self, queries, programs: dict, opts: SearchOptions,
+                     valid=None):
         idx = self.index
         pv, pn, pi, pf = idx._pf
         if not opts.use_pq:
             return prefbf.prefbf_topk(pv, pn, pi, pf, queries, programs,
                                       k=opts.k, chunk=idx.prefbf_chunk,
-                                      use_pallas=opts.use_pallas)
+                                      use_pallas=opts.use_pallas,
+                                      valid=valid)
         from ..quant import adc as quant_adc
         rr = opts.rerank if opts.rerank is not None else idx.rerank
         if idx.quantize == "pq":
             return quant_adc.pq_prefbf_topk(
                 idx._codes, pn, pi, pf, queries, programs, idx._cb_dev[0],
                 pv, k=opts.k, rerank=rr, chunk=idx.prefbf_chunk,
-                use_pallas=opts.use_pallas)
+                use_pallas=opts.use_pallas, valid=valid)
         return quant_adc.sq_prefbf_topk(
             idx._codes, idx._cb_dev[0], idx._cb_dev[1], pn, pi, pf,
             queries, programs, pv, k=opts.k, rerank=rr,
-            chunk=idx.prefbf_chunk)
+            chunk=idx.prefbf_chunk, valid=valid)
 
 
 # ---------------------------------------------------------------------------
@@ -234,10 +257,15 @@ class ShardedBackend:
             self._fns_cache[key] = fns
         return fns
 
-    def _pad(self, queries, programs: dict):
+    def _pad(self, queries, programs: dict, valid=None):
         """Pad the batch to a multiple of the query-axis device count (the
-        shard_map data-parallel split needs an even division)."""
+        shard_map data-parallel split needs an even division).  The serve
+        executables always take a validity mask, so ``valid=None`` is
+        materialized as all-True for the real rows; alignment pad rows are
+        marked False."""
         b = int(queries.shape[0])
+        valid = (np.ones((b,), bool) if valid is None
+                 else np.asarray(valid, bool))
         pad = (-b) % self._qmult
         if pad:
             queries = jnp.concatenate(
@@ -245,7 +273,8 @@ class ShardedBackend:
             programs = {k: jnp.concatenate(
                 [v, jnp.repeat(v[-1:], pad, axis=0)]) for k, v in
                 programs.items()}
-        return queries, programs, b
+            valid = np.concatenate([valid, np.zeros((pad,), bool)])
+        return queries, programs, jnp.asarray(valid), b
 
     # -- Backend protocol -----------------------------------------------------
     def version(self) -> int:
@@ -257,19 +286,22 @@ class ShardedBackend:
         self._epoch += 1
         return self._epoch
 
+    @property
+    def dim(self) -> int:
+        """Query vector dimensionality (warmup builds dummy batches off it)."""
+        return int(self.sharded.arrays["vectors"].shape[1])
+
     def validate(self, opts: SearchOptions) -> None:
         if opts.use_pq and self.quant is None:
             raise ValueError("use_pq=True needs a ShardedBackend built with "
                              "quantize codes (BuildSpec.quant, codebook=, or "
                              "attach_quant)")
-        if opts.use_pallas:
-            raise ValueError("use_pallas is not supported inside the sharded "
-                             "serve path yet; use LocalBackend")
 
-    def estimate(self, programs: dict):
+    def estimate(self, programs: dict, valid=None):
+        # pad rows carry always-false programs (p_hat 0) -- no mask needed
         dummy = jnp.zeros((int(next(iter(programs.values())).shape[0]), 1),
                           jnp.float32)
-        _, programs, b = self._pad(dummy, programs)
+        _, programs, _, b = self._pad(dummy, programs)
         # the estimate executable is SearchConfig-independent: reuse any
         # cached serve-fns set rather than keying a fresh one on defaults
         fns = (next(iter(self._fns_cache.values())) if self._fns_cache
@@ -277,21 +309,22 @@ class ShardedBackend:
         return fns["estimate"](self.db, programs)[:b]
 
     def search_graph(self, queries, programs: dict, p_hat,
-                     opts: SearchOptions) -> dict:
-        queries, programs, b = self._pad(queries, programs)
+                     opts: SearchOptions, valid=None) -> dict:
+        queries, programs, valid, b = self._pad(queries, programs, valid)
         p_hat = jnp.asarray(p_hat, jnp.float32)
         pad = queries.shape[0] - p_hat.shape[0]
         if pad:
             p_hat = jnp.concatenate([p_hat, jnp.repeat(p_hat[-1:], pad)])
         ids, dists = self._fns(opts)["serve_graph_phat"](
-            self.db, queries, programs, p_hat)
+            self.db, queries, programs, p_hat, valid)
         return {"ids": np.asarray(ids)[:b], "dists": np.asarray(dists)[:b]}
 
-    def search_brute(self, queries, programs: dict, opts: SearchOptions):
-        queries, programs, b = self._pad(queries, programs)
+    def search_brute(self, queries, programs: dict, opts: SearchOptions,
+                     valid=None):
+        queries, programs, valid, b = self._pad(queries, programs, valid)
         fn = "serve_brute_pq" if opts.use_pq else "serve_brute"
         fns = self._fns(opts, for_pq=opts.use_pq)
-        ids, dists = fns[fn](self.db, queries, programs)
+        ids, dists = fns[fn](self.db, queries, programs, valid)
         return np.asarray(ids)[:b], np.asarray(dists)[:b]
 
     # -- accounting -----------------------------------------------------------

@@ -194,6 +194,7 @@ def input_specs(n: int, dim: int, m_i: int, m_f: int, n_shards: int, *,
             "flo": sds((batch, width, m_f), f32),
             "fhi": sds((batch, width, m_f), f32),
         },
+        "valid": sds((batch,), jnp.bool_),
     }
 
 
@@ -219,10 +220,19 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
     """Build the jitted sharded serve steps for ``mesh``.
 
     Returns dict with:
-      estimate(db, programs)              -> (B,) p_hat (replicated)
-      serve_graph(db, queries, programs)  -> ids (B,k) GLOBAL row ids, dists
-      serve_brute(db, queries, programs)  -> ids (B,k), dists
-      serve_brute_pq(db, queries, programs) [quant only] -> ids, dists
+      estimate(db, programs)                     -> (B,) p_hat (replicated)
+      serve_graph(db, queries, programs, valid)  -> ids (B,k) GLOBAL ids, dists
+      serve_brute(db, queries, programs, valid)  -> ids (B,k), dists
+      serve_brute_pq(db, queries, programs, valid) [quant only] -> ids, dists
+
+    ``valid`` is the (B,) bool row mask of the bucket-padding contract
+    (core.batching): False rows are pad rows and come back as -1 / +inf
+    (pass all-True when every row is real).
+
+    With ``cfg.use_pallas`` the per-shard brute scans run through the
+    filtered_topk / pq_adc Pallas kernels inside the shard_map body (each
+    shard launches the kernel over its own row slice; the cross-shard top-k
+    merge is unchanged).
 
     With ``quant`` set ("pq"/"sq") the db dict must carry the attach_quant
     arrays; serve_brute_pq streams only the uint8 codes per shard (ADC LUT
@@ -234,6 +244,7 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
     qspec = P(query_axes if len(query_axes) > 1 else query_axes[0], None)
     pspec_each = {"valid": P(qspec[0], None), "imask": P(qspec[0], None, None),
                   "flo": P(qspec[0], None, None), "fhi": P(qspec[0], None, None)}
+    vspec = P(qspec[0])  # (B,) validity mask, co-sharded with the queries
     ef = ef_sel or cfg.ef
     dspecs = db_specs(model_axis, quant)
 
@@ -254,7 +265,7 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
         check_rep=False))
 
     # -- graph route ----------------------------------------------------------
-    def _graph_from_phat(db, queries, programs, p_hat):
+    def _graph_from_phat(db, queries, programs, p_hat, valid):
         local_g = {
             "vectors": db["vectors"], "norms": db["norms"],
             "neighbors0": db["neighbors0"], "upper": db["upper"],
@@ -263,20 +274,21 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
         }
         D = exclusion.exclusion_distance(p_hat, ef, db["delta_d"][0],
                                          k=cfg.k, xp=jnp)
-        out = favor_graph_search(local_g, queries, programs, D, cfg)
+        out = favor_graph_search(local_g, queries, programs, D, cfg,
+                                 valid=valid)
         shard = jax.lax.axis_index(model_axis).astype(jnp.int32)
         n_local = db["vectors"].shape[0]
         gids = jnp.where(out["ids"] >= 0, out["ids"] + shard * n_local, -1)
         d, i = _merge_topk(out["dists"], gids, cfg.k, model_axis)
         return jnp.where(jnp.isfinite(d), i, -1), d
 
-    def _serve_graph(db, queries, programs):
+    def _serve_graph(db, queries, programs, valid):
         return _graph_from_phat(db, queries, programs,
-                                _estimate(db, programs))
+                                _estimate(db, programs), valid)
 
     serve_graph = jax.jit(shard_map(
         _serve_graph, mesh=mesh,
-        in_specs=(dspecs, qspec, pspec_each),
+        in_specs=(dspecs, qspec, pspec_each, vspec),
         out_specs=(qspec, qspec),
         check_rep=False))
 
@@ -285,17 +297,22 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
     # O(B x sample) evaluation twice per batch)
     serve_graph_phat = jax.jit(shard_map(
         _graph_from_phat, mesh=mesh,
-        in_specs=(dspecs, qspec, pspec_each, P(qspec[0])),
+        in_specs=(dspecs, qspec, pspec_each, P(qspec[0]), vspec),
         out_specs=(qspec, qspec),
         check_rep=False))
 
     # -- brute route -----------------------------------------------------------
-    def _serve_brute(db, queries, programs):
+    def _serve_brute(db, queries, programs, valid):
         n_local = db["vectors"].shape[0]
         chunk = largest_divisor(n_local, prefbf_chunk)
+        if cfg.use_pallas:
+            # the scan chunk becomes the kernel's n-tile; keep it VMEM-sized
+            # (the kernel pads the shard's row count internally)
+            chunk = min(chunk, 512)
         ids, d = prefbf.prefbf_topk(
             db["vectors"], db["norms"], db["attrs_int"], db["attrs_float"],
-            queries, programs, k=cfg.k, chunk=chunk)
+            queries, programs, k=cfg.k, chunk=chunk,
+            use_pallas=cfg.use_pallas, valid=valid)
         shard = jax.lax.axis_index(model_axis).astype(jnp.int32)
         gids = jnp.where(ids >= 0, ids + shard * n_local, -1)
         d, i = _merge_topk(d, gids, cfg.k, model_axis)
@@ -303,7 +320,7 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
 
     serve_brute = jax.jit(shard_map(
         _serve_brute, mesh=mesh,
-        in_specs=(dspecs, qspec, pspec_each),
+        in_specs=(dspecs, qspec, pspec_each, vspec),
         out_specs=(qspec, qspec),
         check_rep=False))
 
@@ -315,23 +332,27 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
     if quant is not None:
         from ..quant import adc as quant_adc
 
-        def _serve_brute_pq(db, queries, programs):
+        def _serve_brute_pq(db, queries, programs, valid):
             """Per shard: ADC LUT scan over the local uint8 codes -> exact
             float32 re-rank of the top rerank*k local candidates -> global
             ids -> cross-shard top-k merge.  The O(Ns) scan reads only codes;
-            float32 rows are touched for the R re-rank candidates alone."""
+            float32 rows are touched for the R re-rank candidates alone.
+            With cfg.use_pallas the PQ scan runs the pq_adc kernel (the SQ
+            fallback has no kernel and ignores the flag, like LocalBackend)."""
             n_local = db["norms"].shape[0]
             chunk = largest_divisor(n_local, prefbf_chunk)
             if quant == "pq":
                 ids, d = quant_adc.pq_prefbf_topk(
                     db["codes"], db["norms"], db["attrs_int"],
                     db["attrs_float"], queries, programs, db["centroids"],
-                    db["vectors"], k=cfg.k, rerank=rerank, chunk=chunk)
+                    db["vectors"], k=cfg.k, rerank=rerank, chunk=chunk,
+                    use_pallas=cfg.use_pallas, valid=valid)
             else:
                 ids, d = quant_adc.sq_prefbf_topk(
                     db["codes"], db["sq_lo"], db["sq_scale"], db["norms"],
                     db["attrs_int"], db["attrs_float"], queries, programs,
-                    db["vectors"], k=cfg.k, rerank=rerank, chunk=chunk)
+                    db["vectors"], k=cfg.k, rerank=rerank, chunk=chunk,
+                    valid=valid)
             shard = jax.lax.axis_index(model_axis).astype(jnp.int32)
             n_loc = jnp.asarray(n_local, jnp.int32)
             gids = jnp.where(ids >= 0, ids + shard * n_loc, -1)
@@ -340,7 +361,7 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
 
         fns["serve_brute_pq"] = jax.jit(shard_map(
             _serve_brute_pq, mesh=mesh,
-            in_specs=(dspecs, qspec, pspec_each),
+            in_specs=(dspecs, qspec, pspec_each, vspec),
             out_specs=(qspec, qspec),
             check_rep=False))
 

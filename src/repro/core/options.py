@@ -21,6 +21,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 
+from .batching import BatchSpec
 from .hnsw import HnswParams
 from .search import SearchConfig
 from .selector import SelectorConfig
@@ -144,6 +145,13 @@ class SearchOptions:
     or "brute" -- anything else is a ValueError (the seed treated typos as
     auto-route).  ``rerank=None`` defers to the index/backend default;
     ``rerank=0`` means "exact-re-rank only the top k" and is honored as such.
+
+    ``batch`` is the shape-stable execution policy (core.batching): when set,
+    the router bucket-pads the estimate call and the graph/brute sub-batches
+    to pow-2 sizes (pad rows carry always-false filter programs and a False
+    validity mask), bounding the compiled-shape set to the bucket ladder.
+    ``None`` (default) keeps the pre-1.2 raw-shape behavior; results are
+    bit-identical either way.
     """
     k: int = 10
     ef: int = 100
@@ -154,6 +162,7 @@ class SearchOptions:
     use_pallas: bool = False
     use_pq: bool = False
     rerank: int | None = None
+    batch: BatchSpec | None = None
 
     def __post_init__(self):
         if self.force not in ROUTES:
@@ -169,6 +178,9 @@ class SearchOptions:
         if self.rerank is not None and self.rerank < 0:
             raise ValueError(f"SearchOptions.rerank must be None or >= 0, "
                              f"got {self.rerank}")
+        if self.batch is not None and not isinstance(self.batch, BatchSpec):
+            raise TypeError("SearchOptions.batch must be a BatchSpec or "
+                            f"None, got {self.batch!r}")
 
     def search_config(self) -> SearchConfig:
         """Lower to the jit-static config the compiled executables key on."""

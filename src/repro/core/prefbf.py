@@ -44,18 +44,21 @@ def pad_db(vectors: np.ndarray, norms: np.ndarray, ints: np.ndarray,
 
 @partial(jax.jit, static_argnames=("k", "chunk", "use_pallas"))
 def prefbf_topk(vectors, norms, ints, floats, queries, programs, *,
-                k: int, chunk: int = 16384, use_pallas: bool = False):
+                k: int, chunk: int = 16384, use_pallas: bool = False,
+                valid=None):
     """Fused filtered brute-force top-k.
 
     vectors (N, d), norms (N,), ints (N, m_i), floats (N, m_f);
-    queries (B, d); programs batched filter programs.
+    queries (B, d); programs batched filter programs; ``valid`` an optional
+    (B,) bool query mask (bucket padding) -- False rows return -1 / +inf.
     Returns ids (B, k) int32 (-1 for missing) and dists (B, k) (+inf missing).
     N must be a multiple of ``chunk`` (see pad_db).
     """
     if use_pallas:
         from ..kernels.filtered_topk import ops as ft_ops
         return ft_ops.filtered_topk(vectors, norms, ints, floats, queries,
-                                    programs, k=k, block_n=chunk)
+                                    programs, k=k, block_n=chunk,
+                                    valid=valid)
 
     n, d = vectors.shape
     b = queries.shape[0]
@@ -88,4 +91,8 @@ def prefbf_topk(vectors, norms, ints, floats, queries, programs, *,
     starts = (jnp.arange(n_chunks, dtype=jnp.int32) * chunk)
     (best_d, best_i), _ = jax.lax.scan(step, init, (vc, nc, ic, fc, starts))
     best_i = jnp.where(jnp.isfinite(best_d), best_i, -1)
+    if valid is not None:
+        vmask = jnp.asarray(valid, bool)[:, None]
+        best_d = jnp.where(vmask, best_d, INF)
+        best_i = jnp.where(vmask, best_i, -1)
     return best_i, best_d

@@ -21,6 +21,7 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 import numpy as np
 
+from . import batching
 from . import filters as F
 from . import selector
 from .options import ROUTES, SearchOptions
@@ -33,10 +34,12 @@ class SearchResult:
     p_hat: np.ndarray    # (B,)
     routed_brute: np.ndarray  # (B,) bool
     # hops/path_td are per-query graph traversal diagnostics: 0 for
-    # brute-routed queries AND for backends that do not report them (the
-    # sharded serve path returns only ids/dists from its top-k merge)
-    hops: np.ndarray     # (B,)
-    path_td: np.ndarray  # (B,)
+    # brute-routed (and cache-served) queries, and ``None`` for the whole
+    # batch when a graph sub-batch ran on a backend that does not report
+    # them (the sharded serve path returns only ids/dists from its top-k
+    # merge) -- None-safe so operators can tell "no hops" from "unknown"
+    hops: np.ndarray | None     # (B,) or None
+    path_td: np.ndarray | None  # (B,) or None
     elapsed_s: float = 0.0
 
     @property
@@ -96,14 +99,28 @@ def plan_routes(p_hat: np.ndarray, lam: float,
 
 
 def take_programs(programs: dict, idx: np.ndarray) -> dict:
-    """Row-slice a stacked program dict to a sub-batch."""
-    return {k: jnp.asarray(np.asarray(v)[idx]) for k, v in programs.items()}
+    """Row-slice a stacked program dict to a sub-batch (device-side gather;
+    the seed's ``np.asarray(v)[idx]`` forced a device->host->device round
+    trip per route split)."""
+    idx = jnp.asarray(np.asarray(idx, np.int32))
+    return {k: jnp.take(jnp.asarray(v), idx, axis=0)
+            for k, v in programs.items()}
 
 
-def execute(backend, queries, filters, opts: SearchOptions) -> SearchResult:
+def execute(backend, queries, filters, opts: SearchOptions, *,
+            registry=None) -> SearchResult:
     """Run one filtered-ANNS batch through ``backend`` (paper Fig. 1 online
     phase): result-cache fast path -> estimate -> route -> per-route
     execution -> reassembly.
+
+    When ``opts.batch`` is a BatchSpec, the estimate call and each route
+    sub-batch are bucket-padded before hitting the backend: pad rows carry
+    an always-false filter program plus a False entry in the ``valid`` mask
+    the backend receives, and are stripped on reassembly -- so the compiled
+    shape set is bounded by the bucket ladder while results stay
+    bit-identical to the unpadded path.  ``registry`` (a
+    batching.ShapeRegistry) optionally records every compiled-entry-point
+    shape and the pad overhead paid.
 
     Backends may optionally implement two duck-typed hooks (the cache
     subsystem's ``CachingBackend`` does; plain backends need neither):
@@ -118,6 +135,7 @@ def execute(backend, queries, filters, opts: SearchOptions) -> SearchResult:
     queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
     b = queries.shape[0]
     programs = compile_programs(filters, backend.schema, b)
+    spec = opts.batch
 
     t0 = time.perf_counter()
     ids = np.full((b, opts.k), -1, np.int64)
@@ -126,6 +144,7 @@ def execute(backend, queries, filters, opts: SearchOptions) -> SearchResult:
     routed_brute = np.zeros((b,), bool)
     hops = np.zeros((b,), np.int64)
     path_td = np.zeros((b,), np.int64)
+    graph_diag = True  # False once a graph backend omits hops/path_td
 
     lookup = getattr(backend, "lookup_result", None)
     cached = lookup(np.asarray(queries), programs, opts) if lookup else None
@@ -145,7 +164,14 @@ def execute(backend, queries, filters, opts: SearchOptions) -> SearchResult:
         full = len(miss) == b
         mq = queries if full else queries[miss]
         mprogs = programs if full else take_programs(programs, miss)
-        mp_hat = np.asarray(backend.estimate(mprogs))
+        if spec is None:
+            batching.record(registry, "estimate", len(miss), len(miss))
+            mp_hat = np.asarray(backend.estimate(mprogs))
+        else:
+            eprogs, evalid = batching.pad_programs(spec, mprogs)
+            batching.record(registry, "estimate", len(evalid), len(miss))
+            mp_hat = np.asarray(backend.estimate(
+                eprogs, valid=evalid))[:len(miss)]
         plan = plan_routes(mp_hat, backend.sel_cfg.lam, opts.force)
         p_hat[miss] = plan.p_hat
         routed_brute[miss] = plan.brute
@@ -153,23 +179,37 @@ def execute(backend, queries, filters, opts: SearchOptions) -> SearchResult:
         gi, bi = plan.graph_idx, plan.brute_idx
         if len(gi):
             whole = len(gi) == len(miss)
-            out = backend.search_graph(
-                mq if whole else mq[gi],
-                mprogs if whole else take_programs(mprogs, gi),
-                jnp.asarray(mp_hat if whole else mp_hat[gi]), opts)
-            ids[miss[gi]] = np.asarray(out["ids"])
-            dists[miss[gi]] = np.asarray(out["dists"])
-            hops[miss[gi]] = np.asarray(out.get("hops",
-                                                np.zeros(len(gi), np.int64)))
-            path_td[miss[gi]] = np.asarray(
-                out.get("path_td", np.zeros(len(gi), np.int64)))
+            gq = mq if whole else mq[gi]
+            gprogs = mprogs if whole else take_programs(mprogs, gi)
+            gp = mp_hat if whole else mp_hat[gi]
+            gvalid = None
+            if spec is not None:
+                gq, gprogs, gp, gvalid = batching.pad_to_bucket(
+                    spec, gq, gprogs, gp)
+            batching.record(registry, "graph", int(gq.shape[0]), len(gi),
+                            opts)
+            out = backend.search_graph(gq, gprogs, jnp.asarray(gp), opts,
+                                       valid=gvalid)
+            ids[miss[gi]] = np.asarray(out["ids"])[:len(gi)]
+            dists[miss[gi]] = np.asarray(out["dists"])[:len(gi)]
+            if "hops" in out:
+                hops[miss[gi]] = np.asarray(out["hops"])[:len(gi)]
+                path_td[miss[gi]] = np.asarray(out["path_td"])[:len(gi)]
+            else:
+                graph_diag = False
         if len(bi):
             whole = len(bi) == len(miss)
-            bid, bd = backend.search_brute(
-                mq if whole else mq[bi],
-                mprogs if whole else take_programs(mprogs, bi), opts)
-            ids[miss[bi]] = np.asarray(bid)
-            dists[miss[bi]] = np.asarray(bd)
+            bq = mq if whole else mq[bi]
+            bprogs = mprogs if whole else take_programs(mprogs, bi)
+            bvalid = None
+            if spec is not None:
+                bq, bprogs, _, bvalid = batching.pad_to_bucket(spec, bq,
+                                                               bprogs)
+            batching.record(registry, "brute", int(bq.shape[0]), len(bi),
+                            opts)
+            bid, bd = backend.search_brute(bq, bprogs, opts, valid=bvalid)
+            ids[miss[bi]] = np.asarray(bid)[:len(bi)]
+            dists[miss[bi]] = np.asarray(bd)[:len(bi)]
 
         record = getattr(backend, "record_result", None)
         if record is not None:
@@ -177,5 +217,6 @@ def execute(backend, queries, filters, opts: SearchOptions) -> SearchResult:
                    mp_hat, plan.brute)
     # the np.asarray conversions above already synced the device work
     elapsed = time.perf_counter() - t0
-    return SearchResult(ids, dists, p_hat, routed_brute, hops, path_td,
-                        elapsed)
+    return SearchResult(ids, dists, p_hat, routed_brute,
+                        hops if graph_diag else None,
+                        path_td if graph_diag else None, elapsed)

@@ -70,9 +70,17 @@ def graph_arrays(index: HnswIndex, attrs: F.AttributeTable) -> dict:
 
 
 def _pairwise_dist(q: jnp.ndarray, vecs: jnp.ndarray, vnorm: jnp.ndarray) -> jnp.ndarray:
-    """(B, d), (B, M, d), (B, M) -> true Euclidean distance (B, M)."""
+    """(B, d), (B, M, d), (B, M) -> true Euclidean distance (B, M).
+
+    The dot is a *batched mat-vec* (one d-contraction per (b, m) pair), so
+    it is written as multiply + last-axis reduce rather than an einsum:
+    XLA lowers the reduce with a batch-size-independent accumulation order,
+    which keeps results bit-identical when bucket padding changes B (a
+    dot_general here picks different codegen for B=1 vs B=8 on CPU).  The
+    contraction never fed the MXU efficiently anyway -- b is a batch dim.
+    """
     qn = jnp.sum(q * q, axis=-1)  # (B,)
-    dot = jnp.einsum("bd,bmd->bm", q, vecs)
+    dot = jnp.sum(q[:, None, :] * vecs, axis=-1)
     d2 = vnorm + qn[:, None] - 2.0 * dot
     return jnp.sqrt(jnp.maximum(d2, 0.0))
 
@@ -124,13 +132,17 @@ def _merge_pool(pool_d, pool_i, pool_t, new_d, new_i, new_t, cap: int):
 
 @partial(jax.jit, static_argnames=("cfg",))
 def favor_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
-                       D: jnp.ndarray, cfg: SearchConfig) -> dict:
+                       D: jnp.ndarray, cfg: SearchConfig,
+                       valid=None) -> dict:
     """Batched OptiGreedySearch (Algorithm 3) with exclusion distances.
 
     g         : graph_arrays dict (possibly one shard of the DB)
     queries   : (B, d) float32
     programs  : batched filter programs {valid (B,W), imask, flo, fhi}
     D         : (B,) per-query exclusion distance (Eq. 14, from p_hat)
+    valid     : optional (B,) bool lane mask (bucket padding): False lanes
+                start inactive -- they never expand a node, cost no search
+                work, and return ids=-1 / dists=+inf / hops=0
     returns   : {"ids": (B,k) int32 (-1 pad), "dists": (B,k) f32 (+inf pad),
                  "hops": (B,), "path_td": (B,)}
     """
@@ -156,7 +168,8 @@ def favor_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
     res_i = jnp.full((B, ef), -1, jnp.int32).at[:, 0].set(ep)
     res_t = jnp.zeros((B, ef), bool).at[:, 0].set(ep_td)
     visited = jnp.zeros((B, N), bool).at[rows, ep].set(True)
-    active = jnp.ones((B,), bool)
+    active = (jnp.ones((B,), bool) if valid is None
+              else jnp.asarray(valid, bool))
     hops = jnp.zeros((B,), jnp.int32)
     path_td = jnp.zeros((B,), jnp.int32)
 
@@ -242,6 +255,10 @@ def favor_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
     out_d = jnp.take_along_axis(sd, order, axis=1)
     out_i = jnp.take_along_axis(state["res_i"], order, axis=1)
     out_i = jnp.where(jnp.isfinite(out_d), out_i, -1)
+    if valid is not None:
+        vmask = jnp.asarray(valid, bool)[:, None]
+        out_i = jnp.where(vmask, out_i, -1)
+        out_d = jnp.where(vmask, out_d, INF)
     return {"ids": out_i, "dists": out_d,
             "hops": state["hops"], "path_td": state["path_td"]}
 

@@ -24,9 +24,11 @@ def _pad_rows(x, n_to, fill):
 def filtered_topk(vectors, norms, ints, floats, queries, programs, *,
                   k: int = 10, block_q: int = 128, block_n: int = 512,
                   dvec=None, exclude: bool = False,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, valid=None):
     """Fused filtered brute-force top-k over the DB (Pallas).
 
+    ``valid`` is an optional (B,) bool query mask (bucket padding): False
+    rows return -1 / +inf without needing a special filter program.
     Returns (ids (B, k) int32 with -1 for missing, dists (B, k) f32 with +inf
     for missing) -- same contract as core.prefbf.prefbf_topk.
     """
@@ -63,5 +65,7 @@ def filtered_topk(vectors, norms, ints, floats, queries, programs, *,
         k=k, block_q=bq, block_n=bn, exclude=exclude, interpret=interpret)
     out_d, out_i = out_d[:b], out_i[:b]
     missing = out_d >= BIG
+    if valid is not None:
+        missing = missing | ~jnp.asarray(valid, bool)[:, None]
     return (jnp.where(missing, -1, out_i),
             jnp.where(missing, jnp.inf, out_d))

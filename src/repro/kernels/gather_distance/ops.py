@@ -12,13 +12,21 @@ from .kernel import BIG, gather_distance_pallas
 
 @partial(jax.jit, static_argnames=("interpret",))
 def gather_distance(vectors, norms, ints, floats, queries, nbr_ids, programs,
-                    dvec, *, interpret: bool | None = None):
+                    dvec, *, interpret: bool | None = None, valid=None):
     """Graph-expansion distance evaluation (Pallas).
 
+    ``valid`` is an optional (B,) bool query mask (bucket padding): False
+    rows return all-+inf distances and no TD hits.
     Returns (dbar (B, M) f32 -- +inf at -1 padding, td (B, M) bool)."""
     if interpret is None:
         interpret = default_interpret()
     out_d, out_td = gather_distance_pallas(
         nbr_ids.astype(jnp.int32), queries, vectors, norms, ints, floats,
         programs, dvec.astype(jnp.float32), interpret=interpret)
-    return (jnp.where(out_d >= BIG, jnp.inf, out_d), out_td.astype(bool))
+    out_d = jnp.where(out_d >= BIG, jnp.inf, out_d)
+    out_td = out_td.astype(bool)
+    if valid is not None:
+        vmask = jnp.asarray(valid, bool)[:, None]
+        out_d = jnp.where(vmask, out_d, jnp.inf)
+        out_td = out_td & vmask
+    return (out_d, out_td)

@@ -14,14 +14,16 @@ from .kernel import BIG, pq_adc_pallas
 @partial(jax.jit, static_argnames=("r", "block_q", "block_n", "interpret"))
 def pq_adc_topr(codes, norms, ints, floats, luts, programs, *,
                 r: int = 40, block_q: int = 128, block_n: int = 512,
-                interpret: bool | None = None):
+                interpret: bool | None = None, valid=None):
     """Fused compressed filtered top-R candidate scan (Pallas).
 
     codes (N, M) uint8/int32; norms (N,) float32 (+inf/BIG rows are treated
     as padding); luts (B, M, K) from quant.adc.build_luts; programs batched
-    filter programs.  Returns (ids (B, R) int32 with -1 for missing,
-    adc_d2 (B, R) f32 with +inf for missing) -- ADC distances are squared
-    and approximate; callers re-rank exactly (quant/adc.py).
+    filter programs; ``valid`` an optional (B,) bool query mask (bucket
+    padding): False rows return -1 / +inf.  Returns (ids (B, R) int32 with
+    -1 for missing, adc_d2 (B, R) f32 with +inf for missing) -- ADC
+    distances are squared and approximate; callers re-rank exactly
+    (quant/adc.py).
     """
     b, m, ksub = luts.shape
     n = codes.shape[0]
@@ -52,5 +54,7 @@ def pq_adc_topr(codes, norms, ints, floats, luts, programs, *,
         r=r, block_q=bq, block_n=bn, interpret=interpret)
     out_d, out_i = out_d[:b], out_i[:b]
     missing = out_d >= BIG
+    if valid is not None:
+        missing = missing | ~jnp.asarray(valid, bool)[:, None]
     return (jnp.where(missing, -1, out_i),
             jnp.where(missing, jnp.inf, out_d))

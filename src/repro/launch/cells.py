@@ -371,7 +371,8 @@ def build_favor_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
     else:
         mf = cfg.batch * cfg.n * 2.0 * cfg.dim
     return Cell("favor-anns", cell.name, fn,
-                (specs["db"], specs["queries"], specs["programs"]),
+                (specs["db"], specs["queries"], specs["programs"],
+                 specs["valid"]),
                 None, mf, note=f"paper serve step ({route} route)")
 
 

@@ -192,7 +192,8 @@ def favor_variant(arch: str, shape: str, *, sample_rate: float = 0.01,
         mf = (cfg.batch * 4.0 * cfg.ef * cfg.m0 * 2.0 * cfg.dim
               if route == "graph" else cfg.batch * cfg.n * 2.0 * cfg.dim)
         return C.Cell("favor-anns", shape_, fn,
-                      (specs["db"], specs["queries"], specs["programs"]),
+                      (specs["db"], specs["queries"], specs["programs"],
+                       specs["valid"]),
                       None, mf,
                       note=f"sample_rate={sample_rate} ccap={cand_cap} b={batch}")
 

@@ -85,31 +85,38 @@ def _adc_scan(codes, norms, ints, floats, luts, programs, *, r: int,
     return best_d, jnp.where(jnp.isfinite(best_d), best_i, -1)
 
 
-def _exact_rerank(vectors, norms, queries, cand_i, *, k: int):
-    """Exact float32 top-k over the (B, R) ADC candidate lists."""
+def _exact_rerank(vectors, norms, queries, cand_i, *, k: int, valid=None):
+    """Exact float32 top-k over the (B, R) ADC candidate lists.  ``valid``
+    is the optional (B,) bool query mask: False rows return -1 / +inf."""
     safe = jnp.maximum(cand_i, 0)
     v = vectors[safe]                                        # (B, R, d)
     vn = norms[safe]
     qn = jnp.sum(queries * queries, axis=-1)
-    dot = jnp.einsum("bd,brd->br", queries, v)
+    # batched mat-vec as multiply + reduce: bit-identical across batch
+    # sizes (bucket padding), unlike a dot_general (see search._pairwise_dist)
+    dot = jnp.sum(queries[:, None, :] * v, axis=-1)
     dist = jnp.sqrt(jnp.maximum(vn + qn[:, None] - 2.0 * dot, 0.0))
     dist = jnp.where(cand_i >= 0, dist, INF)
     order = jnp.argsort(dist, axis=1)[:, :k]
     out_d = jnp.take_along_axis(dist, order, axis=1)
     out_i = jnp.take_along_axis(cand_i, order, axis=1)
+    if valid is not None:
+        vmask = jnp.asarray(valid, bool)[:, None]
+        out_d = jnp.where(vmask, out_d, INF)
     return jnp.where(jnp.isfinite(out_d), out_i, -1), out_d
 
 
 @partial(jax.jit, static_argnames=("k", "rerank", "chunk", "use_pallas"))
 def pq_prefbf_topk(codes, norms, ints, floats, queries, programs, centroids,
                    vectors, *, k: int, rerank: int = 4, chunk: int = 8192,
-                   use_pallas: bool = False):
+                   use_pallas: bool = False, valid=None):
     """Compressed filtered brute-force top-k with exact re-rank.
 
     codes (N, M) uint8; norms/ints/floats/vectors: the padded DB arrays from
     prefbf.pad_db (norms also gate out padded rows here, since a padded code
     row is a legal code word); queries (B, d); programs batched filter
-    programs; centroids (M, K, dsub).
+    programs; centroids (M, K, dsub); ``valid`` an optional (B,) bool query
+    mask (bucket padding) -- False rows return -1 / +inf.
 
     Same contract as prefbf_topk: ids (B, k) int32 (-1 missing) and exact
     float32 dists (B, k) (+inf missing).
@@ -122,21 +129,23 @@ def pq_prefbf_topk(codes, norms, ints, floats, queries, programs, centroids,
         # (bn, K) one-hot per subspace); don't forward the scan chunk as-is
         cand_i, _ = pq_ops.pq_adc_topr(codes, norms, ints, floats, luts,
                                        programs, r=r,
-                                       block_n=min(chunk, 512))
+                                       block_n=min(chunk, 512), valid=valid)
     else:
         _, cand_i = _adc_scan(codes, norms, ints, floats, luts, programs,
                               r=r, chunk=chunk)
-    return _exact_rerank(vectors, norms, queries, cand_i, k=k)
+    return _exact_rerank(vectors, norms, queries, cand_i, k=k, valid=valid)
 
 
 @partial(jax.jit, static_argnames=("k", "rerank", "chunk"))
 def sq_prefbf_topk(codes, lo, scale, norms, ints, floats, queries, programs,
-                   vectors, *, k: int, rerank: int = 4, chunk: int = 8192):
+                   vectors, *, k: int, rerank: int = 4, chunk: int = 8192,
+                   valid=None):
     """Scalar-quantization fallback scan: per-chunk dequantize + matmul.
 
     codes (N, d) uint8.  The approximate distance is computed against the
     int8-dequantized vectors (still 4x fewer bytes streamed than float32);
     candidates then get the same exact float32 re-rank as the PQ path.
+    ``valid`` is the optional (B,) bool query mask (bucket padding).
     """
     r = max(k, rerank * k)
     n, d = codes.shape
@@ -167,4 +176,4 @@ def sq_prefbf_topk(codes, lo, scale, norms, ints, floats, queries, programs,
     starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
     (best_d, cand_i), _ = jax.lax.scan(step, init, (cc, nc, ic, fc, starts))
     cand_i = jnp.where(jnp.isfinite(best_d), cand_i, -1)
-    return _exact_rerank(vectors, norms, queries, cand_i, k=k)
+    return _exact_rerank(vectors, norms, queries, cand_i, k=k, valid=valid)

@@ -27,9 +27,11 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..core import batching
 from ..core import filters as F
 from ..core import router
 from ..core.backend import LocalBackend
+from ..core.batching import ShapeRegistry
 from ..core.favor import FavorIndex
 from ..core.options import SearchOptions
 
@@ -102,22 +104,57 @@ class ServeEngine:
         # with request count (percentiles are over the last N requests)
         self.latencies: deque[float] = deque(maxlen=latency_window)
         self._next_rid = 0
+        # compiled-shape + pad-overhead ledger (core.batching); fed by every
+        # router.execute call and by warmup()
+        self.registry = ShapeRegistry()
+        # graph-traversal diagnostics: totals across served requests, or
+        # None-safe "unknown" once a backend that doesn't report them (the
+        # sharded serve path) handled a graph sub-batch
+        self._hops = 0
+        self._path_td = 0
+        self._diag_known = True
 
     @property
     def stats(self) -> dict:
-        """Routing counters, plus the backend's per-layer cache hit/miss/
+        """Routing counters; ``hops``/``path_td`` graph-traversal totals
+        (``None`` -- not silently 0 -- when the backend does not report
+        them, e.g. the sharded top-k merge); ``batching`` compiled-shape and
+        pad-overhead counters; plus the backend's per-layer cache hit/miss/
         bypass counters when it is cache-capable (CachingBackend)."""
         out = dict(self._counters)
+        out["hops"] = self._hops if self._diag_known else None
+        out["path_td"] = self._path_td if self._diag_known else None
+        out["batching"] = self.registry.stats()
         cache_stats = getattr(self.backend, "cache_stats", None)
         if cache_stats is not None:
             out["cache"] = cache_stats()
         return out
 
     def reset_stats(self) -> None:
-        """Zero the routing counters and drop the latency window (cached
-        *entries* survive; use backend.clear() to drop those too)."""
+        """Zero the routing counters, diagnostics and pad-overhead rows and
+        drop the latency window.  The compiled-shape set survives (it
+        mirrors still-live executables), as do cached *entries*; use
+        backend.clear() to drop those too."""
         self._counters = {"graph": 0, "brute": 0, "batches": 0}
         self.latencies.clear()
+        self._hops = 0
+        self._path_td = 0
+        self._diag_known = True
+        self.registry.reset_rows()
+
+    def warmup(self, buckets=None) -> tuple[int, ...]:
+        """Compile every (estimate/graph/brute, bucket) executable now, so
+        first-request traffic never pays an XLA/Pallas compile.  Requires
+        ``opts.batch`` to be set (raises ValueError otherwise: unpadded
+        traffic would never reuse the warmed shapes); routes pinned away by
+        ``opts.force`` are skipped.  Returns the warmed ladder."""
+        ladder = batching.warmup(self.backend, self.opts, buckets=buckets,
+                                 registry=self.registry)
+        # warmup batches are 100% pad rows; drop them from the row counters
+        # so stats["batching"]["pad_overhead"] reflects live traffic only
+        # (the compiled-shape set they created survives)
+        self.registry.reset_rows()
+        return ladder
 
     @property
     def k(self) -> int:
@@ -157,14 +194,25 @@ class ServeEngine:
         self._counters["batches"] += 1
         queries = np.stack([r.query for r in batch])
         flts = [r.flt for r in batch]
-        # bucket-pad so each (route, size) pair reuses a compiled program
-        b = _bucket(len(batch))
-        if b > len(batch):
-            queries = np.concatenate(
-                [queries, np.repeat(queries[-1:], b - len(batch), 0)])
-            flts = flts + [flts[-1]] * (b - len(batch))
-        res = router.execute(self.backend, queries, flts, self.opts)
+        if self.opts.batch is None:
+            # legacy whole-batch repeat-padding: reuses a compiled program
+            # per batch size, but the post-route gi/bi sub-batches still
+            # recompile per split.  With opts.batch set the router bucket-
+            # pads every sub-batch itself (mask rows, bit-identical results)
+            # so no pre-padding is needed here.
+            b = _bucket(len(batch))
+            if b > len(batch):
+                queries = np.concatenate(
+                    [queries, np.repeat(queries[-1:], b - len(batch), 0)])
+                flts = flts + [flts[-1]] * (b - len(batch))
+        res = router.execute(self.backend, queries, flts, self.opts,
+                             registry=self.registry)
         t_done = time.perf_counter()
+        if res.hops is None:
+            self._diag_known = False
+        else:  # slice off legacy whole-batch pad rows, if any
+            self._hops += int(res.hops[:len(batch)].sum())
+            self._path_td += int(res.path_td[:len(batch)].sum())
         out = []
         for i, r in enumerate(batch):
             route = "brute" if res.routed_brute[i] else "graph"

@@ -34,13 +34,16 @@ SCRIPT = textwrap.dedent("""
     p_hat = np.asarray(fns["estimate"](db, progs))
     assert abs(p_hat.mean() - mask.mean()) < 0.08, p_hat
 
-    ids, ds = (np.asarray(x) for x in fns["serve_graph"](db, queries, progs))
+    valid = jnp.ones((Q,), bool)
+    ids, ds = (np.asarray(x) for x in
+               fns["serve_graph"](db, queries, progs, valid))
     recs = [refimpl.recall_at_k(ids[i],
             refimpl.bruteforce_filtered(vecs, mask, queries[i], 10)[0], 10)
             for i in range(Q)]
     assert np.mean(recs) >= 0.9, np.mean(recs)
 
-    bids, _ = (np.asarray(x) for x in fns["serve_brute"](db, queries, progs))
+    bids, _ = (np.asarray(x) for x in
+               fns["serve_brute"](db, queries, progs, valid))
     recs_b = [refimpl.recall_at_k(bids[i],
               refimpl.bruteforce_filtered(vecs, mask, queries[i], 10)[0], 10)
               for i in range(Q)]
