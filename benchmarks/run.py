@@ -24,6 +24,8 @@ def main() -> None:
 
     benches = [
         ("qps_recall_figs4_5_8_9", bench_qps_recall.run),
+        # graph-route scorer layer: f32 vs PQ-ADC traversal (core.scoring)
+        ("graph_scorers", bench_qps_recall.run_scorers),
         ("quant_pq_adc", bench_quant.run),
         ("serve_backends", bench_serve_backends.run),
         # also emits the stable cross-PR serving summary BENCH_serve.json

@@ -11,18 +11,21 @@ from .hnsw import HnswIndex, HnswParams, build_hnsw
 from .options import BuildSpec, CacheSpec, QuantSpec, SearchOptions
 from .backend import Backend, LocalBackend, ShardedBackend
 from .router import RoutePlan, SearchResult
+from .scoring import (ExactScorer, PqAdcScorer, Scorer, SqScorer,
+                      exclusion_compose, scorer_for)
 from .search import SearchConfig, favor_graph_search, graph_arrays, rsf_graph_search
 
 __all__ = [
     "And", "AttributeTable", "Backend", "BatchSpec", "BuildSpec",
-    "CacheSpec", "ColumnSpec", "Equality", "FalseFilter", "Filter",
-    "FavorIndex", "HnswIndex", "HnswParams", "Inclusion", "LocalBackend",
-    "Not", "Or", "QuantSpec", "Range", "RoutePlan", "Schema",
-    "SearchConfig", "SearchOptions", "SearchResult", "ShapeRegistry",
-    "ShardedBackend", "TrueFilter", "batch_signatures", "batching",
-    "build_hnsw", "compile_filter", "exclusion", "favor_graph_search",
-    "filter_signature", "filters", "graph_arrays", "paper_filters",
-    "paper_schema", "prefbf", "program_signature", "random_attributes",
-    "refimpl", "router", "rsf_graph_search", "selectivity", "selector",
-    "stack_programs",
+    "CacheSpec", "ColumnSpec", "Equality", "ExactScorer", "FalseFilter",
+    "Filter", "FavorIndex", "HnswIndex", "HnswParams", "Inclusion",
+    "LocalBackend", "Not", "Or", "PqAdcScorer", "QuantSpec", "Range",
+    "RoutePlan", "Schema", "Scorer", "SearchConfig", "SearchOptions",
+    "SearchResult", "ShapeRegistry", "ShardedBackend", "SqScorer",
+    "TrueFilter", "batch_signatures", "batching", "build_hnsw",
+    "compile_filter", "exclusion", "exclusion_compose",
+    "favor_graph_search", "filter_signature", "filters", "graph_arrays",
+    "paper_filters", "paper_schema", "prefbf", "program_signature",
+    "random_attributes", "refimpl", "router", "rsf_graph_search",
+    "scorer_for", "selectivity", "selector", "stack_programs",
 ]

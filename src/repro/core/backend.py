@@ -12,6 +12,9 @@ Two implementations ship here:
 
   LocalBackend   -- single-host, extracted from the seed ``FavorIndex.search``
                     body: per-route jitted executables, PQ/SQ ADC brute scan.
+                    The graph route's scorer (f32 / PQ-ADC / SQ, see
+                    core.scoring) is picked by ``SearchOptions.graph_quant``,
+                    which lowers into the jit-static SearchConfig.
   ShardedBackend -- multi-device serve path over ``distributed.make_serve_fns``
                     (DB sharded on "model", queries on "data"), including the
                     sharded compressed brute route: PQ codes are co-sharded
@@ -113,6 +116,12 @@ class LocalBackend:
         if opts.use_pq and self.index.codebook is None:
             raise ValueError("use_pq=True needs an index built with "
                              "quantize='pq' or 'sq' (BuildSpec.quant)")
+        if (opts.graph_quant is not None
+                and self.index.quantize != opts.graph_quant):
+            raise ValueError(
+                f"graph_quant={opts.graph_quant!r} needs an index built "
+                f"with quantize={opts.graph_quant!r} codes "
+                f"(this one has {self.index.quantize!r})")
 
     def version(self) -> int:
         """Data epoch of the underlying FavorIndex (see Backend.version)."""
@@ -296,6 +305,11 @@ class ShardedBackend:
             raise ValueError("use_pq=True needs a ShardedBackend built with "
                              "quantize codes (BuildSpec.quant, codebook=, or "
                              "attach_quant)")
+        if opts.graph_quant is not None and self.quant != opts.graph_quant:
+            raise ValueError(
+                f"graph_quant={opts.graph_quant!r} needs a ShardedBackend "
+                f"with {opts.graph_quant!r} codes attached "
+                f"(this one has {self.quant!r})")
 
     def estimate(self, programs: dict, valid=None):
         # pad rows carry always-false programs (p_hat 0) -- no mask needed

@@ -240,6 +240,12 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
     candidates against the shard's float32 rows, and only then joins the
     cross-shard top-k merge -- so the bandwidth-bound scan never touches
     float32.
+
+    With ``cfg.graph_quant`` set the *graph* route also scores on the
+    attached codes (core.scoring): each shard's traversal gathers uint8
+    code rows per hop and exact-re-ranks its final TD candidates before the
+    cross-shard merge, so the per-hop neighbor fetch is code-resident too
+    (requires ``quant`` == ``cfg.graph_quant``).
     """
     qspec = P(query_axes if len(query_axes) > 1 else query_axes[0], None)
     pspec_each = {"valid": P(qspec[0], None), "imask": P(qspec[0], None, None),
@@ -265,6 +271,11 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
         check_rep=False))
 
     # -- graph route ----------------------------------------------------------
+    if cfg.graph_quant is not None and cfg.graph_quant != quant:
+        raise ValueError(
+            f"cfg.graph_quant={cfg.graph_quant!r} needs the serve DB built "
+            f"with matching attach_quant codes (quant={quant!r})")
+
     def _graph_from_phat(db, queries, programs, p_hat, valid):
         local_g = {
             "vectors": db["vectors"], "norms": db["norms"],
@@ -272,6 +283,15 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
             "entry": db["entry"][0],
             "attrs_int": db["attrs_int"], "attrs_float": db["attrs_float"],
         }
+        if cfg.graph_quant is not None:
+            # scorer arrays (core.scoring): each shard scores its own code
+            # rows; the replicated codebook tables ride along
+            local_g["codes"] = db["codes"]
+            if cfg.graph_quant == "pq":
+                local_g["centroids"] = db["centroids"]
+            else:
+                local_g["sq_lo"] = db["sq_lo"]
+                local_g["sq_scale"] = db["sq_scale"]
         D = exclusion.exclusion_distance(p_hat, ef, db["delta_d"][0],
                                          k=cfg.k, xp=jnp)
         out = favor_graph_search(local_g, queries, programs, D, cfg,

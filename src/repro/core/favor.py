@@ -107,7 +107,10 @@ class FavorIndex:
         self.attrs = attrs
         self.sel_cfg = spec.selector
         self.schema = attrs.schema
-        self.g = graph_arrays(index, attrs)
+        # memoized per (index, attrs): rebuilding a FavorIndex over the same
+        # built HNSW (benchmark cache, test fixtures) reuses device arrays;
+        # copy so the quantized-scorer keys below never touch the cache
+        self.g = dict(graph_arrays(index, attrs))
 
         samp = selectivity.sample_indices(
             index.n, self.sel_cfg.sample_rate, self.sel_cfg.min_sample,
@@ -164,6 +167,7 @@ class FavorIndex:
             else:
                 self._cb_dev = (jnp.asarray(codebook.lo),
                                 jnp.asarray(codebook.scale))
+            self._attach_scorer_arrays()
 
     # -- construction --------------------------------------------------------
     @staticmethod
@@ -186,14 +190,32 @@ class FavorIndex:
     def delta_d(self) -> float:
         return self.index.delta_d
 
+    def _attach_scorer_arrays(self) -> None:
+        """Graph-route scorer arrays (core.scoring): code rows 0..N-1 of the
+        padded encoding align with the graph arrays (pad_db appends), so the
+        traversal can score on codes via SearchOptions.graph_quant."""
+        if self._codes is None:
+            return
+        self.g["codes"] = self._codes[: self.index.n]
+        if self.quantize == "pq":
+            self.g["centroids"] = self._cb_dev[0]
+        else:
+            self.g["sq_lo"], self.g["sq_scale"] = self._cb_dev
+
     def version(self) -> int:
         """Data epoch consumed by layered caches (Backend.version)."""
         return self._epoch
 
     def bump_version(self) -> int:
         """Mark the served rows as changed (rebuild, attribute update):
-        CachingBackend wrappers drop every cached entry on the next call."""
+        CachingBackend wrappers drop every cached entry on the next call,
+        and the memoized graph arrays are re-uploaded under the new epoch
+        (an in-place attrs edit would otherwise keep serving the stale
+        device copies)."""
         self._epoch += 1
+        self.g = dict(graph_arrays(self.index, self.attrs,
+                                   version=self._epoch))
+        self._attach_scorer_arrays()
         return self._epoch
 
     @property

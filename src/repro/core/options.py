@@ -23,11 +23,13 @@ from dataclasses import dataclass, field, replace
 
 from .batching import BatchSpec
 from .hnsw import HnswParams
+from .scoring import GRAPH_QUANT_KINDS
 from .search import SearchConfig
 from .selector import SelectorConfig
 
 ROUTES = (None, "graph", "brute")
 QUANT_KINDS = ("pq", "sq")
+GRAPH_QUANT = GRAPH_QUANT_KINDS  # one constant: options + scorer_for agree
 
 
 @dataclass(frozen=True)
@@ -146,6 +148,18 @@ class SearchOptions:
     auto-route).  ``rerank=None`` defers to the index/backend default;
     ``rerank=0`` means "exact-re-rank only the top k" and is honored as such.
 
+    ``graph_quant`` selects the graph-route *scorer* (core.scoring): None
+    keeps full-precision f32 traversal, "pq"/"sq" score neighbor blocks on
+    the backend's quantize codes (ADC LUTs / dequantized int8) and exact-
+    re-rank the final top TD candidates -- the per-hop HBM traffic drops
+    from 4*d to M (or d) bytes per gathered row.  The backend must hold
+    codes of the same kind (validated in Backend.validate, like use_pq).
+    ``graph_rerank`` is that re-rank's depth multiplier (top
+    ``max(k, graph_rerank * k)`` TD candidates, capped at ef; 0 means
+    exactly the top k); ``None`` defers to the default 4.  Both are
+    jit-static: they lower into SearchConfig, so each (scorer, rerank)
+    pair is its own compiled executable.
+
     ``batch`` is the shape-stable execution policy (core.batching): when set,
     the router bucket-pads the estimate call and the graph/brute sub-batches
     to pow-2 sizes (pad rows carry always-false filter programs and a False
@@ -162,6 +176,8 @@ class SearchOptions:
     use_pallas: bool = False
     use_pq: bool = False
     rerank: int | None = None
+    graph_quant: str | None = None
+    graph_rerank: int | None = None
     batch: BatchSpec | None = None
 
     def __post_init__(self):
@@ -178,6 +194,12 @@ class SearchOptions:
         if self.rerank is not None and self.rerank < 0:
             raise ValueError(f"SearchOptions.rerank must be None or >= 0, "
                              f"got {self.rerank}")
+        if self.graph_quant not in GRAPH_QUANT:
+            raise ValueError(f"SearchOptions.graph_quant must be one of "
+                             f"{GRAPH_QUANT}, got {self.graph_quant!r}")
+        if self.graph_rerank is not None and self.graph_rerank < 0:
+            raise ValueError(f"SearchOptions.graph_rerank must be None or "
+                             f">= 0, got {self.graph_rerank}")
         if self.batch is not None and not isinstance(self.batch, BatchSpec):
             raise TypeError("SearchOptions.batch must be a BatchSpec or "
                             f"None, got {self.batch!r}")
@@ -186,7 +208,10 @@ class SearchOptions:
         """Lower to the jit-static config the compiled executables key on."""
         return SearchConfig(k=self.k, ef=self.ef, cand_cap=self.cand_cap,
                             pbar_min=self.pbar_min, gamma=self.gamma,
-                            use_pallas=self.use_pallas)
+                            use_pallas=self.use_pallas,
+                            graph_quant=self.graph_quant,
+                            graph_rerank=(4 if self.graph_rerank is None
+                                          else self.graph_rerank))
 
     def with_(self, **overrides) -> "SearchOptions":
         return replace(self, **overrides)

@@ -9,18 +9,32 @@ TPU-native realization of Algorithms 2 + 3 (DESIGN.md section 3):
    heaps.  C capacity = ``cand_cap`` (default ef) is the bounded-memory
    approximation of the paper's unbounded heap; recall parity with the
    refimpl oracle is asserted in tests and measured in benchmarks;
- * each step gathers one neighbor block (B, M0) and evaluates distances with
-   a single (B, M0, d) einsum -- MXU work -- plus the compiled filter program
-   on the gathered attribute rows (branch-free bitmask/interval math);
- * the exclusion distance (Eq. 2) is a fused ``d + D * (1 - mask)`` select;
+ * neighbor-block scoring is pluggable (``core.scoring``): the same
+   traversal body runs full-precision f32 (ExactScorer), PQ asymmetric
+   distances over gathered uint8 codes (PqAdcScorer: the ADC LUT is built
+   once per query before the loop) or dequantized int8 (SqScorer),
+   selected by the jit-static ``SearchConfig.graph_quant``;
+ * the exclusion distance (Eq. 2) composes *on top of* whatever the scorer
+   returns (``scoring.exclusion_compose``); quantized scorers get an exact
+   f32 re-rank of the final top-``graph_rerank * k`` TD candidates (the
+   same pass the brute route uses, quant/adc.py);
  * termination implements section 5.4: the usual adjusted-distance condition
    AND the TD-fraction guard ``pbar > pbar_min`` (0 disables);
- * the visited set is a dense per-query bool bitmap (O(B*N) bytes).
+ * the visited set is a packed per-query uint32 bitfield
+   ``(B, ceil(N/32))`` -- 8x less HBM per lane than the former (B, N) bool
+   bitmap at multi-million-N scale.
+
+``favor_graph_search`` (exclusion distances) and ``rsf_graph_search``
+(result-set-filtering baseline: D = 0, R admits TD only) are two thin
+entry points over ONE parameterized traversal body, so they stay in
+lockstep on the lane-mask (bucket padding) contract and the hops/path_td
+diagnostics.
 
 Everything here is jit/shard_map friendly: shapes static, no host callbacks.
 """
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass
 from functools import partial
 
@@ -30,8 +44,13 @@ import numpy as np
 
 from . import filters as F
 from .hnsw import HnswIndex
+from .scoring import exclusion_compose, pairwise_dist, scorer_for
 
 INF = jnp.inf
+
+# back-compat alias: callers (and the batching docs) reference the
+# mul+reduce pairwise distance by its historical private name
+_pairwise_dist = pairwise_dist
 
 
 @dataclass(frozen=True)
@@ -42,7 +61,10 @@ class SearchConfig:
     max_steps: int = 0         # 0 -> 8 * ef safety bound
     pbar_min: float = 0.5      # section 5.4 threshold (0 disables)
     gamma: float = 1.0         # Algorithm 3 line 8 slack
-    use_pallas: bool = False   # route neighbor distance eval through Pallas
+    use_pallas: bool = False   # route scoring through the Pallas kernels
+    graph_quant: str | None = None  # None (f32) | "pq" | "sq" scorer
+    graph_rerank: int = 4      # exact-re-rank depth: top max(k, rr*k) TD
+                               # candidates, capped at ef (quantized only)
 
     @property
     def ccap(self) -> int:
@@ -53,12 +75,40 @@ class SearchConfig:
         return self.max_steps or 8 * self.ef
 
 
-def graph_arrays(index: HnswIndex, attrs: F.AttributeTable) -> dict:
+# ---------------------------------------------------------------------------
+# Graph array preparation (memoized)
+# ---------------------------------------------------------------------------
+_GRAPH_ARRAYS_CACHE: dict = {}
+_GRAPH_ARRAYS_CAP = 8
+
+
+def graph_arrays(index: HnswIndex, attrs: F.AttributeTable,
+                 version: int = 0) -> dict:
     """Flatten an HnswIndex + attribute table to the device array dict the
-    production search (and the dry-run input_specs) consume."""
+    production search (and the dry-run input_specs) consume.
+
+    Memoized per ``(index identity, attrs identity, version)``: repeated
+    FavorIndex / ServeEngine construction over the same built index (the
+    benchmark-cache pattern) reuses the device arrays instead of re-uploading
+    the corpus.  Entries die with their index/attrs (weakrefs, identity
+    checked on hit so recycled ``id()``s never alias) and the cache is
+    bounded.  Treat the returned dict as immutable -- copy before adding
+    keys (FavorIndex does, for the quantized-scorer arrays).
+    """
+    key = (id(index), id(attrs), int(version))
+    hit = _GRAPH_ARRAYS_CACHE.get(key)
+    if hit is not None:
+        iref, aref, g = hit
+        if iref() is index and aref() is attrs:
+            return g
+        del _GRAPH_ARRAYS_CACHE[key]
+
+    def _evict(k=key):
+        _GRAPH_ARRAYS_CACHE.pop(k, None)
+
     upper = (np.stack(index.levels[1:], axis=0) if index.max_level >= 1
              else np.zeros((0, index.n, index.params.M), np.int32))
-    return {
+    g = {
         "vectors": jnp.asarray(index.vectors),
         "norms": jnp.asarray(index.norms.astype(np.float32)),
         "neighbors0": jnp.asarray(index.levels[0]),
@@ -67,30 +117,59 @@ def graph_arrays(index: HnswIndex, attrs: F.AttributeTable) -> dict:
         "attrs_int": jnp.asarray(attrs.ints),
         "attrs_float": jnp.asarray(attrs.floats),
     }
+    while len(_GRAPH_ARRAYS_CACHE) >= _GRAPH_ARRAYS_CAP:
+        _GRAPH_ARRAYS_CACHE.pop(next(iter(_GRAPH_ARRAYS_CACHE)))
+    # finalizers evict the entry the moment index/attrs die, so the cache
+    # never pins device arrays of freed corpora (the hit-time identity
+    # check above covers id() reuse in the window before GC runs)
+    _GRAPH_ARRAYS_CACHE[key] = (weakref.ref(index), weakref.ref(attrs), g)
+    weakref.finalize(index, _evict)
+    weakref.finalize(attrs, _evict)
+    return g
 
 
-def _pairwise_dist(q: jnp.ndarray, vecs: jnp.ndarray, vnorm: jnp.ndarray) -> jnp.ndarray:
-    """(B, d), (B, M, d), (B, M) -> true Euclidean distance (B, M).
+# ---------------------------------------------------------------------------
+# Packed visited set: (B, ceil(N/32)) uint32 bitfield
+# ---------------------------------------------------------------------------
+def _visited_words(n: int) -> int:
+    return (n + 31) // 32
 
-    The dot is a *batched mat-vec* (one d-contraction per (b, m) pair), so
-    it is written as multiply + last-axis reduce rather than an einsum:
-    XLA lowers the reduce with a batch-size-independent accumulation order,
-    which keeps results bit-identical when bucket padding changes B (a
-    dot_general here picks different codegen for B=1 vs B=8 on CPU).  The
-    contraction never fed the MXU efficiently anyway -- b is a batch dim.
+
+def _seen_bits(visited, rows, safe):
+    """(B, W) words, (B, M) clamped ids -> (B, M) bool already-visited."""
+    word = visited[rows[:, None], safe >> 5]
+    return ((word >> (safe & 31).astype(jnp.uint32)) & 1) > 0
+
+
+def _visit_bits(visited, rows, safe, mark):
+    """Set the bits for ``mark``-ed entries of ``safe``.
+
+    The scatter is an *add* (JAX has no scatter-or), which is exact only if
+    every bit lands at most once -- so duplicates of an id **within one
+    block** are dropped from the scatter first.  ``mark`` itself is left
+    untouched for pool admission, preserving the old bool-bitmap semantics
+    (``.at[].max`` was idempotent) bit for bit.
     """
-    qn = jnp.sum(q * q, axis=-1)  # (B,)
-    dot = jnp.sum(q[:, None, :] * vecs, axis=-1)
-    d2 = vnorm + qn[:, None] - 2.0 * dot
-    return jnp.sqrt(jnp.maximum(d2, 0.0))
+    m = safe.shape[1]
+    col = jnp.arange(m)
+    dup = ((safe[:, :, None] == safe[:, None, :])
+           & mark[:, :, None] & mark[:, None, :]
+           & (col[None, None, :] < col[None, :, None]))
+    first = mark & ~jnp.any(dup, axis=2)
+    bits = jnp.where(first,
+                     jnp.uint32(1) << (safe & 31).astype(jnp.uint32),
+                     jnp.uint32(0))
+    return visited.at[rows[:, None], safe >> 5].add(bits)
 
 
-def _descend(g: dict, queries: jnp.ndarray) -> jnp.ndarray:
+# ---------------------------------------------------------------------------
+# Traversal building blocks
+# ---------------------------------------------------------------------------
+def _descend(g: dict, queries: jnp.ndarray, scorer, sstate: dict) -> jnp.ndarray:
     """Upper-layer greedy descent (no filtering), returns entry ids (B,)."""
     B = queries.shape[0]
     cur = jnp.full((B,), g["entry"], jnp.int32)
-    curd = _pairwise_dist(queries, g["vectors"][cur][:, None, :],
-                          g["norms"][cur][:, None])[:, 0]
+    curd = scorer.score_block(g, sstate, cur[:, None])[:, 0]
     n_upper = g["upper"].shape[0]
     for li in range(n_upper - 1, -1, -1):
         level = g["upper"][li]
@@ -104,7 +183,7 @@ def _descend(g: dict, queries: jnp.ndarray) -> jnp.ndarray:
             nbrs = level[cur]                      # (B, M)
             ok = nbrs >= 0
             safe = jnp.maximum(nbrs, 0)
-            d = _pairwise_dist(queries, g["vectors"][safe], g["norms"][safe])
+            d = scorer.score_block(g, sstate, safe)
             d = jnp.where(ok, d, INF)
             j = jnp.argmin(d, axis=1)
             best = jnp.take_along_axis(d, j[:, None], axis=1)[:, 0]
@@ -130,44 +209,43 @@ def _merge_pool(pool_d, pool_i, pool_t, new_d, new_i, new_t, cap: int):
             jnp.take_along_axis(t, order, axis=1))
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def favor_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
-                       D: jnp.ndarray, cfg: SearchConfig,
-                       valid=None) -> dict:
-    """Batched OptiGreedySearch (Algorithm 3) with exclusion distances.
+def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
+                    D: jnp.ndarray, cfg: SearchConfig, scorer, valid,
+                    *, rsf: bool) -> dict:
+    """The ONE traversal body behind favor_graph_search / rsf_graph_search.
 
-    g         : graph_arrays dict (possibly one shard of the DB)
-    queries   : (B, d) float32
-    programs  : batched filter programs {valid (B,W), imask, flo, fhi}
-    D         : (B,) per-query exclusion distance (Eq. 14, from p_hat)
-    valid     : optional (B,) bool lane mask (bucket padding): False lanes
-                start inactive -- they never expand a node, cost no search
-                work, and return ids=-1 / dists=+inf / hops=0
-    returns   : {"ids": (B,k) int32 (-1 pad), "dists": (B,k) f32 (+inf pad),
-                 "hops": (B,), "path_td": (B,)}
+    ``scorer`` supplies the (approximate or exact) distances; the exclusion
+    select, the validity-mask plumbing, the pools and the diagnostics are
+    identical across scorers and across the FAVOR/RSF modes.  ``rsf=True``
+    is the Result-Set-Filtering baseline: callers pass D = 0, R admits only
+    TD rows, and the section-5.4 pbar guard is off (the baseline has no
+    exclusion statistics to guard with).
     """
-    B, dim = queries.shape
+    B, _ = queries.shape
     N = g["vectors"].shape[0]
-    M0 = g["neighbors0"].shape[1]
     ef, ccap = cfg.ef, cfg.ccap
     rows = jnp.arange(B)
 
-    ep = _descend(g, queries)                        # (B,)
+    sstate = scorer.prepare(g, queries, programs)
+    ep = _descend(g, queries, scorer, sstate)        # (B,)
 
     # --- init pools with the entry point -----------------------------------
-    ep_vec = g["vectors"][ep][:, None, :]
-    ep_d = _pairwise_dist(queries, ep_vec, g["norms"][ep][:, None])[:, 0]
+    ep_d = scorer.score_block(g, sstate, ep[:, None])[:, 0]
     ep_td = F.eval_program_gathered(
         programs, g["attrs_int"][ep][:, None, :],
         g["attrs_float"][ep][:, None, :], xp=jnp)[:, 0]
-    ep_dbar = ep_d + jnp.where(ep_td, 0.0, D)
+    ep_key = exclusion_compose(ep_d, ep_td, D)       # rsf: D = 0 -> plain d
+    seed_ok = ep_td if rsf else jnp.ones((B,), bool)
 
-    cand_d = jnp.full((B, ccap), INF).at[:, 0].set(ep_dbar)
+    cand_d = jnp.full((B, ccap), INF).at[:, 0].set(ep_key)
     cand_i = jnp.full((B, ccap), -1, jnp.int32).at[:, 0].set(ep)
-    res_d = jnp.full((B, ef), INF).at[:, 0].set(ep_dbar)
-    res_i = jnp.full((B, ef), -1, jnp.int32).at[:, 0].set(ep)
+    res_d = jnp.full((B, ef), INF).at[:, 0].set(
+        jnp.where(seed_ok, ep_key, INF))
+    res_i = jnp.full((B, ef), -1, jnp.int32).at[:, 0].set(
+        jnp.where(seed_ok, ep, -1))
     res_t = jnp.zeros((B, ef), bool).at[:, 0].set(ep_td)
-    visited = jnp.zeros((B, N), bool).at[rows, ep].set(True)
+    visited = jnp.zeros((B, _visited_words(N)), jnp.uint32).at[
+        rows, ep >> 5].add(jnp.uint32(1) << (ep & 31).astype(jnp.uint32))
     active = (jnp.ones((B,), bool) if valid is None
               else jnp.asarray(valid, bool))
     hops = jnp.zeros((B,), jnp.int32)
@@ -179,55 +257,57 @@ def favor_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
     def body(s):
         cand_d, cand_i = s["cand_d"], s["cand_i"]
         res_d, res_i, res_t = s["res_d"], s["res_i"], s["res_t"]
-        visited, active = s["visited"], s["active"]
+        active = s["active"]
 
         # -- extract argmin of C (Algorithm 3 line 6) ------------------------
         j = jnp.argmin(cand_d, axis=1)
         da = cand_d[rows, j]
         va = cand_i[rows, j]
-        popped = active & jnp.isfinite(da)
         cand_d = jnp.where(active[:, None],
                            cand_d.at[rows, j].set(INF), cand_d)
 
         # -- termination (line 8, with section 5.4 guard) --------------------
         worst = jnp.max(res_d, axis=1)               # +inf while R not full
-        n_valid = jnp.sum(jnp.isfinite(res_d), axis=1)
-        n_td = jnp.sum(res_t & jnp.isfinite(res_d), axis=1)
-        pbar = n_td / jnp.maximum(n_valid, 1)
         full = jnp.isfinite(worst)
         plain_term = (da > cfg.gamma * worst) & full
-        guard_ok = (cfg.pbar_min <= 0.0) | (pbar > cfg.pbar_min)
+        if rsf:
+            guard_ok = jnp.ones((B,), bool)
+        else:
+            n_valid = jnp.sum(jnp.isfinite(res_d), axis=1)
+            n_td = jnp.sum(res_t & jnp.isfinite(res_d), axis=1)
+            pbar = n_td / jnp.maximum(n_valid, 1)
+            guard_ok = (cfg.pbar_min <= 0.0) | (pbar > cfg.pbar_min)
         terminate = plain_term & guard_ok
         exhausted = ~jnp.isfinite(da)
         new_active = active & ~terminate & ~exhausted
         expand = new_active                          # lanes that expand v_a
 
-        # -- gather neighbor block -------------------------------------------
+        # -- gather + score the neighbor block -------------------------------
         va_safe = jnp.maximum(va, 0)
         nbrs = jnp.where(expand[:, None], g["neighbors0"][va_safe], -1)  # (B, M0)
         ok = nbrs >= 0
         safe = jnp.maximum(nbrs, 0)
-        seen = s["visited"][rows[:, None], safe]
+        seen = _seen_bits(s["visited"], rows, safe)
         new = ok & ~seen
-        visited = visited.at[rows[:, None], safe].max(new)
+        visited = _visit_bits(s["visited"], rows, safe, new)
 
-        d = _pairwise_dist(queries, g["vectors"][safe], g["norms"][safe])
+        d = scorer.score_block(g, sstate, safe)
         td = F.eval_program_gathered(
             programs, g["attrs_int"][safe], g["attrs_float"][safe], xp=jnp)
-        dbar = d + jnp.where(td, 0.0, D[:, None])    # Eq. 2
+        key = exclusion_compose(d, td, D[:, None])   # Eq. 2
 
         # -- pool insertion (lines 15-24) -------------------------------------
         worst_now = jnp.max(res_d, axis=1)           # +inf when R not full
-        eligible = new & (dbar < worst_now[:, None])
-        dbar_m = jnp.where(eligible, dbar, INF)
-        nbr_m = jnp.where(eligible, nbrs, -1)
-
-        res_d, res_i, res_t = _merge_pool(res_d, res_i, res_t,
-                                          dbar_m, nbr_m, td & eligible, ef)
-        cand_d, cand_i, _ = _merge_pool(cand_d, cand_i,
-                                        jnp.zeros_like(cand_i, bool),
-                                        dbar_m, nbr_m,
-                                        jnp.zeros_like(nbr_m, bool), ccap)
+        eligible = new & (key < worst_now[:, None])
+        res_ok = (eligible & td) if rsf else eligible
+        res_d, res_i, res_t = _merge_pool(
+            res_d, res_i, res_t,
+            jnp.where(res_ok, key, INF), jnp.where(res_ok, nbrs, -1),
+            td & res_ok, ef)
+        cand_d, cand_i, _ = _merge_pool(
+            cand_d, cand_i, jnp.zeros_like(cand_i, bool),
+            jnp.where(eligible, key, INF), jnp.where(eligible, nbrs, -1),
+            jnp.zeros_like(nbrs, bool), ccap)
 
         va_td = F.eval_program_gathered(
             programs, g["attrs_int"][va_safe][:, None, :],
@@ -250,103 +330,67 @@ def favor_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
     state = jax.lax.while_loop(cond, body, state)
 
     # --- final S: k nearest TD in R (Algorithm 2 line 9) --------------------
-    sd = jnp.where(state["res_t"], state["res_d"], INF)   # TD dbar == true dist
-    order = jnp.argsort(sd, axis=1)[:, : cfg.k]
-    out_d = jnp.take_along_axis(sd, order, axis=1)
-    out_i = jnp.take_along_axis(state["res_i"], order, axis=1)
-    out_i = jnp.where(jnp.isfinite(out_d), out_i, -1)
-    if valid is not None:
-        vmask = jnp.asarray(valid, bool)[:, None]
-        out_i = jnp.where(vmask, out_i, -1)
-        out_d = jnp.where(vmask, out_d, INF)
+    sd = jnp.where(state["res_t"], state["res_d"], INF)  # TD dbar == scorer dist
+    if scorer.exact:
+        order = jnp.argsort(sd, axis=1)[:, : cfg.k]
+        out_d = jnp.take_along_axis(sd, order, axis=1)
+        out_i = jnp.take_along_axis(state["res_i"], order, axis=1)
+        out_i = jnp.where(jnp.isfinite(out_d), out_i, -1)
+        if valid is not None:
+            vmask = jnp.asarray(valid, bool)[:, None]
+            out_i = jnp.where(vmask, out_i, -1)
+            out_d = jnp.where(vmask, out_d, INF)
+    else:
+        # quantized scorer: the pool holds approximate distances -- exact
+        # f32 re-rank of the top-R TD candidates, exactly like the brute
+        # route's ADC scan (quant/adc.py); R caps at ef (the pool size)
+        from ..quant.adc import _exact_rerank
+        r = min(ef, max(cfg.k, cfg.graph_rerank * cfg.k))
+        order = jnp.argsort(sd, axis=1)[:, :r]
+        cand = jnp.take_along_axis(state["res_i"], order, axis=1)
+        cand = jnp.where(jnp.isfinite(
+            jnp.take_along_axis(sd, order, axis=1)), cand, -1)
+        out_i, out_d = _exact_rerank(g["vectors"], g["norms"], queries,
+                                     cand, k=cfg.k, valid=valid)
+        if valid is not None:
+            out_i = jnp.where(jnp.asarray(valid, bool)[:, None], out_i, -1)
     return {"ids": out_i, "dists": out_d,
             "hops": state["hops"], "path_td": state["path_td"]}
 
 
+# ---------------------------------------------------------------------------
+# Public entry points (thin wrappers over the shared body)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("cfg",))
+def favor_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
+                       D: jnp.ndarray, cfg: SearchConfig,
+                       valid=None) -> dict:
+    """Batched OptiGreedySearch (Algorithm 3) with exclusion distances.
+
+    g         : graph_arrays dict (possibly one shard of the DB); for
+                ``cfg.graph_quant`` it must also carry the scorer arrays
+                (codes + centroids | sq_lo/sq_scale)
+    queries   : (B, d) float32
+    programs  : batched filter programs {valid (B,W), imask, flo, fhi}
+    D         : (B,) per-query exclusion distance (Eq. 14, from p_hat)
+    valid     : optional (B,) bool lane mask (bucket padding): False lanes
+                start inactive -- they never expand a node, cost no search
+                work, and return ids=-1 / dists=+inf / hops=0
+    returns   : {"ids": (B,k) int32 (-1 pad), "dists": (B,k) f32 (+inf pad),
+                 "hops": (B,), "path_td": (B,)}
+    """
+    return _graph_traverse(g, queries, programs, D, cfg, scorer_for(cfg),
+                           valid, rsf=False)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def rsf_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
-                     cfg: SearchConfig) -> dict:
+                     cfg: SearchConfig, valid=None) -> dict:
     """Result-Set-Filtering baseline on the same machinery: D = 0 and R only
     admits TD (C takes everything) -- used by benchmarks for head-to-head
-    QPS/recall under identical batching."""
+    QPS/recall under identical batching.  Same lane-mask contract and
+    hops/path_td diagnostics as favor_graph_search (one traversal body)."""
     B = queries.shape[0]
-    N = g["vectors"].shape[0]
-    ef, ccap = cfg.ef, cfg.ccap
-    rows = jnp.arange(B)
-    ep = _descend(g, queries)
-
-    ep_d = _pairwise_dist(queries, g["vectors"][ep][:, None, :],
-                          g["norms"][ep][:, None])[:, 0]
-    ep_td = F.eval_program_gathered(
-        programs, g["attrs_int"][ep][:, None, :],
-        g["attrs_float"][ep][:, None, :], xp=jnp)[:, 0]
-
-    cand_d = jnp.full((B, ccap), INF).at[:, 0].set(ep_d)
-    cand_i = jnp.full((B, ccap), -1, jnp.int32).at[:, 0].set(ep)
-    res_d = jnp.full((B, ef), INF).at[:, 0].set(jnp.where(ep_td, ep_d, INF))
-    res_i = jnp.full((B, ef), -1, jnp.int32).at[:, 0].set(jnp.where(ep_td, ep, -1))
-    res_t = jnp.zeros((B, ef), bool).at[:, 0].set(ep_td)
-    visited = jnp.zeros((B, N), bool).at[rows, ep].set(True)
-
-    def cond(s):
-        return jnp.any(s["active"]) & (s["step"] < cfg.steps)
-
-    def body(s):
-        cand_d, cand_i = s["cand_d"], s["cand_i"]
-        res_d, res_i, res_t = s["res_d"], s["res_i"], s["res_t"]
-        visited, active = s["visited"], s["active"]
-
-        j = jnp.argmin(cand_d, axis=1)
-        da = cand_d[rows, j]
-        va = cand_i[rows, j]
-        cand_d = jnp.where(active[:, None], cand_d.at[rows, j].set(INF), cand_d)
-
-        worst = jnp.max(res_d, axis=1)
-        full = jnp.sum(jnp.isfinite(res_d), axis=1) >= ef
-        terminate = (da > worst) & full
-        exhausted = ~jnp.isfinite(da)
-        new_active = active & ~terminate & ~exhausted
-        expand = new_active
-
-        va_safe = jnp.maximum(va, 0)
-        nbrs = jnp.where(expand[:, None], g["neighbors0"][va_safe], -1)
-        ok = nbrs >= 0
-        safe = jnp.maximum(nbrs, 0)
-        new = ok & ~s["visited"][rows[:, None], safe]
-        visited = visited.at[rows[:, None], safe].max(new)
-
-        d = _pairwise_dist(queries, g["vectors"][safe], g["norms"][safe])
-        td = F.eval_program_gathered(
-            programs, g["attrs_int"][safe], g["attrs_float"][safe], xp=jnp)
-
-        worst_now = jnp.max(res_d, axis=1)
-        admit = new & ((d < worst_now[:, None]) | ~full[:, None])
-        d_c = jnp.where(admit, d, INF)
-        i_c = jnp.where(admit, nbrs, -1)
-        cand_d, cand_i, _ = _merge_pool(cand_d, cand_i,
-                                        jnp.zeros_like(cand_i, bool),
-                                        d_c, i_c, jnp.zeros_like(i_c, bool), ccap)
-        d_r = jnp.where(admit & td, d, INF)
-        i_r = jnp.where(admit & td, nbrs, -1)
-        res_d, res_i, res_t = _merge_pool(res_d, res_i, res_t, d_r, i_r,
-                                          td & admit, ef)
-        return {
-            "cand_d": cand_d, "cand_i": cand_i,
-            "res_d": res_d, "res_i": res_i, "res_t": res_t,
-            "visited": visited, "active": new_active,
-            "step": s["step"] + 1,
-            "hops": s["hops"] + expand.astype(jnp.int32),
-        }
-
-    state = jax.lax.while_loop(cond, body, {
-        "cand_d": cand_d, "cand_i": cand_i,
-        "res_d": res_d, "res_i": res_i, "res_t": res_t,
-        "visited": visited, "active": jnp.ones((B,), bool),
-        "step": jnp.asarray(0, jnp.int32), "hops": jnp.zeros((B,), jnp.int32),
-    })
-    sd = jnp.where(state["res_t"], state["res_d"], INF)
-    order = jnp.argsort(sd, axis=1)[:, : cfg.k]
-    out_d = jnp.take_along_axis(sd, order, axis=1)
-    out_i = jnp.take_along_axis(state["res_i"], order, axis=1)
-    out_i = jnp.where(jnp.isfinite(out_d), out_i, -1)
-    return {"ids": out_i, "dists": out_d, "hops": state["hops"]}
+    return _graph_traverse(g, queries, programs,
+                           jnp.zeros((B,), jnp.float32), cfg,
+                           scorer_for(cfg), valid, rsf=True)

@@ -68,6 +68,64 @@ def _kernel(lut_ref, c_ref, n_ref, ai_ref, af_ref, valid_ref, imask_ref,
     oi_ref[...] = bi
 
 
+def _gather_kernel(idx_ref, lut_ref, c_ref, o_ref, *, m: int, ksub: int):
+    """One (query, neighbor) cell: ADC-accumulate the gathered code row.
+
+    The code row arrives via the scalar-prefetch index_map (the same
+    paged-attention indirection gather_distance uses); the LUT slice is the
+    query's full (1, M*K) table.  TPU Pallas has no in-kernel vector gather,
+    so the per-subspace lookup is an (M, K) one-hot mask-and-reduce on the
+    VPU -- M*K fmas per neighbor, tiny next to the row DMA it replaces.
+    """
+    b = pl.program_id(0)
+    mm = pl.program_id(1)
+    raw = idx_ref[b, mm]
+
+    # codes stay uint8 end to end -- the row DMA moves M bytes, not 4*M
+    # (the whole point of scoring on codes); widen in-register for the
+    # comparison only
+    codes = c_ref[0].astype(jnp.int32)                  # (M,)
+    lut = lut_ref[...].reshape(m, ksub)                 # (M, K)
+    kcols = jax.lax.broadcasted_iota(jnp.int32, (m, ksub), 1)
+    oh = (codes[:, None] == kcols).astype(jnp.float32)
+    adc = jnp.sum(lut * oh)
+
+    o_ref[0, 0] = jnp.where(raw < 0, BIG, adc)
+
+
+def pq_adc_gather_pallas(nbr_ids, luts, codes, *, interpret: bool):
+    """Block-gather ADC scoring (graph-route sibling of pq_adc_pallas).
+
+    nbr_ids (B, M0) int32 (-1 pad); luts (B, M*K) flattened; codes (N, M)
+    uint8 -- NOT widened host-side, so each gathered row streams M bytes.
+    Returns adc_d2 (B, M0) float32 with BIG at padding.
+    """
+    b, m0 = nbr_ids.shape
+    n, m = codes.shape
+    mk = luts.shape[1]
+    ksub = mk // m
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, m0),
+        in_specs=[
+            pl.BlockSpec((1, mk), lambda bi, mi, idx: (bi, 0)),   # LUT row
+            pl.BlockSpec((1, m),                                  # code[gather]
+                         lambda bi, mi, idx: (jnp.maximum(idx[bi, mi], 0), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda bi, mi, idx: (bi, mi)),
+        ],
+    )
+    (out,) = pl.pallas_call(
+        functools.partial(_gather_kernel, m=m, ksub=ksub),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, m0), jnp.float32)],
+        interpret=interpret,
+    )(nbr_ids, luts, codes)
+    return out
+
+
 def pq_adc_pallas(luts, codes, norms, ints, floats, programs, *, r: int,
                   block_q: int, block_n: int, interpret: bool):
     """Launch the kernel.  All shapes must already be padded to block

@@ -8,7 +8,27 @@ import jax.numpy as jnp
 
 from .. import default_interpret
 from ..filtered_topk.ops import _pad_rows
-from .kernel import BIG, pq_adc_pallas
+from .kernel import BIG, pq_adc_gather_pallas, pq_adc_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pq_adc_gather(codes, luts, nbr_ids, *, interpret: bool | None = None):
+    """Graph-expansion ADC scoring (Pallas block-gather variant).
+
+    codes (N, M) uint8/int32; luts (B, M, K) from quant.adc.build_luts;
+    nbr_ids (B, M0) int32 per-query neighbor ids (-1 pad -> +inf).  Returns
+    adc_d2 (B, M0) float32 -- squared approximate distances; the traversal
+    masks pad/visited entries and re-ranks its final candidates exactly.
+    """
+    b, m, ksub = luts.shape
+    if interpret is None:
+        interpret = default_interpret()
+    # codes pass through in their stored uint8 layout: widening here would
+    # materialize a 4x corpus copy and quadruple every gathered row's DMA
+    out = pq_adc_gather_pallas(
+        nbr_ids.astype(jnp.int32), luts.reshape(b, m * ksub),
+        codes, interpret=interpret)
+    return jnp.where(out >= BIG, jnp.inf, out)
 
 
 @partial(jax.jit, static_argnames=("r", "block_q", "block_n", "interpret"))

@@ -8,6 +8,18 @@ from ...core import filters as F
 BIG = 3.0e38
 
 
+def pq_adc_gather_ref(codes, luts, nbr_ids):
+    """Oracle for the block-gather variant: per-(query, neighbor) ADC sums.
+
+    codes (N, M); luts (B, M, K); nbr_ids (B, M0) int32 (-1 -> BIG).
+    Returns adc_d2 (B, M0) float32."""
+    safe = jnp.maximum(nbr_ids, 0)
+    idx = codes.astype(jnp.int32)[safe][..., None]           # (B, M0, M, 1)
+    g = jnp.take_along_axis(luts[:, None, :, :], idx, axis=3)
+    adc = jnp.sum(g[..., 0], axis=-1)                        # (B, M0)
+    return jnp.where(nbr_ids < 0, BIG, adc)
+
+
 def pq_adc_topr_ref(luts, codes, norms, ints, floats, programs, *, r: int):
     """Dense (B, N) ADC matrix + filter program + top-R via argsort.
 

@@ -114,14 +114,32 @@ class ServeEngine:
         self._path_td = 0
         self._diag_known = True
 
+    def _route_scorers(self) -> dict:
+        """Which scorer serves each route under this engine's options:
+        the graph route per ``opts.graph_quant`` (core.scoring), the brute
+        route per ``opts.use_pq`` + the backend's code kind."""
+        target = self.backend
+        inner = getattr(target, "inner", None)
+        while inner is not None:        # unwrap cache decorators
+            target, inner = inner, getattr(inner, "inner", None)
+        kind = getattr(target, "quant", None)
+        if kind is None:
+            kind = getattr(getattr(target, "index", None), "quantize", None)
+        return {"graph": self.opts.graph_quant or "exact",
+                "brute": (kind or "exact") if self.opts.use_pq else "exact",
+                "use_pallas": self.opts.use_pallas}
+
     @property
     def stats(self) -> dict:
-        """Routing counters; ``hops``/``path_td`` graph-traversal totals
-        (``None`` -- not silently 0 -- when the backend does not report
-        them, e.g. the sharded top-k merge); ``batching`` compiled-shape and
-        pad-overhead counters; plus the backend's per-layer cache hit/miss/
-        bypass counters when it is cache-capable (CachingBackend)."""
+        """Routing counters; ``scorers`` -- which scorer (exact/pq/sq)
+        serves each route under the engine's options; ``hops``/``path_td``
+        graph-traversal totals (``None`` -- not silently 0 -- when the
+        backend does not report them, e.g. the sharded top-k merge);
+        ``batching`` compiled-shape and pad-overhead counters; plus the
+        backend's per-layer cache hit/miss/bypass counters when it is
+        cache-capable (CachingBackend)."""
         out = dict(self._counters)
+        out["scorers"] = self._route_scorers()
         out["hops"] = self._hops if self._diag_known else None
         out["path_td"] = self._path_td if self._diag_known else None
         out["batching"] = self.registry.stats()

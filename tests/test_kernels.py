@@ -110,6 +110,40 @@ def test_gather_distance_sweep(n, d, b, m):
 
 
 # ---------------------------------------------------------------------------
+# pq_adc block-gather (graph-route scorer variant)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,b,m0,m,nbits", [
+    (500, 16, 4, 8, 8, 6),
+    (900, 24, 6, 16, 8, 8),   # includes -1 pads below
+    (256, 8, 2, 32, 4, 5),
+])
+def test_pq_adc_gather_sweep(n, d, b, m0, m, nbits):
+    from repro.kernels.pq_adc import ops as pq_ops
+    from repro.kernels.pq_adc import ref as pq_ref
+    from repro.quant import encode, train_pq
+    from repro.quant.adc import build_luts
+    rng = np.random.default_rng(n + m0)
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    cb = train_pq(vecs, m=m, nbits=nbits, iters=4, seed=0)
+    codes = jnp.asarray(encode(cb, vecs))
+    qs = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    luts = build_luts(jnp.asarray(cb.centroids), qs)
+    nbrs = rng.integers(-1, n, size=(b, m0)).astype(np.int32)
+    nbrs[:, 0] = -1          # force the pad path in every parametrization
+    nbrs = jnp.asarray(nbrs)
+    out = pq_ops.pq_adc_gather(codes, luts, nbrs)
+    assert np.isinf(np.asarray(out)[:, 0]).all()   # -1 -> +inf contract
+    ref = np.asarray(pq_ref.pq_adc_gather_ref(codes, luts, nbrs))
+    ref = np.where(ref >= pq_ref.BIG, np.inf, ref)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
+    # the ADC sums really approximate the squared distances
+    real = nbrs[0][np.asarray(nbrs[0]) >= 0]
+    true2 = np.sum((np.asarray(qs)[0] - vecs[np.asarray(real)]) ** 2, axis=-1)
+    approx = np.asarray(out)[0][np.asarray(nbrs[0]) >= 0]
+    assert np.corrcoef(true2, approx)[0, 1] > 0.9
+
+
+# ---------------------------------------------------------------------------
 # embedding_bag
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("v,d,b,l,mode", [
