@@ -16,6 +16,13 @@ its compiles inline, which is exactly the production spike), compiled-shape
 counts from the engine registry, pad overhead, and a result-parity check.
 The sweep lands in the ``batching`` section of bench_out/BENCH_serve.json.
 
+Finally the **live-index churn scenario**: interleaved upsert/delete/search
+traffic holding the unmerged delta at 0% / 1% / 10% of the base row count,
+so the steady-state mutation overhead (delta scan + top-k compose +
+tombstone masking) is tracked across PRs, plus a device-parallel bulk-build
+vs numpy-loop build comparison (wall time and recall@10, asserted within
+1pt in smoke mode).  Lands in the ``mutation`` section of BENCH_serve.json.
+
 The model axis spans every visible device (1 on the CI CPU; S-way sharded
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=S``).
 
@@ -38,6 +45,7 @@ from repro.core import (BatchSpec, FavorIndex, HnswParams, LocalBackend,
 from repro.core import filters as F
 from repro.core.distributed import largest_divisor
 from repro.data import synthetic
+from repro.index.bulk import build_hnsw_bulk
 from repro.serving import ServeEngine
 
 from .common import DIM, N, NQ, SEED, Csv, update_bench_json
@@ -125,6 +133,64 @@ def _p99_sweep(grid, requests, spec: BatchSpec, max_batch: int):
             "p99_ratio": m_p["p99_ms"] / max(m_u["p99_ms"], 1e-12),
         })
     return points
+
+
+def _graph_recall(backend, queries, want_ids, opts, k=10) -> float:
+    r = router.execute(backend, queries, F.TrueFilter(),
+                       opts.with_(force="graph"))
+    return float(np.mean([len(set(r.ids[i]) & set(want_ids[i])) / k
+                          for i in range(len(queries))]))
+
+
+def _churn_point(make_backend, opts, requests, attrs, *, frac: float,
+                 batch: int = 16, seed: int = 7) -> dict:
+    """Serve ``requests`` while holding the live delta at ``frac`` of the
+    base row count: each served batch is preceded by a small upsert burst
+    with matching retirements of the oldest streamed ids, so the measured
+    QPS includes the steady-state mutation overhead (delta scan + compose
+    + tombstone masking), not a one-off ingest spike."""
+    eng = ServeEngine(make_backend(), opts, max_batch=batch)
+    # warm-up over the full stream: compiles every (route, split-size)
+    # executable the timed loop will hit, so the 0%-delta point measures
+    # serving, not first-point compiles
+    i = 0
+    while i < len(requests):
+        for q, flt in requests[i:i + batch]:
+            eng.submit(q, flt)
+        eng.step(force=True)
+        i += batch
+    eng.reset_stats()
+    rng = np.random.default_rng(seed)
+    dim = requests[0][0].shape[0]
+    n_base = eng.stats["mutations"]["base_rows"]
+    target = int(round(frac * n_base))
+    pool: list[int] = []
+
+    def mutate(count: int) -> None:
+        if count <= 0:
+            return
+        rows = rng.integers(0, attrs.ints.shape[0], count)
+        ids = eng.upsert(rng.normal(size=(count, dim)).astype(np.float32),
+                         attrs.ints[rows], attrs.floats[rows])
+        pool.extend(int(i) for i in ids)
+        while len(pool) > target:
+            eng.delete([pool.pop(0)])
+
+    mutate(target)              # reach the steady-state delta fraction
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(requests):
+        mutate(max(1, target // 8) if target else 0)
+        for q, flt in requests[i:i + batch]:
+            eng.submit(q, flt)
+        eng.step(force=True)
+        i += batch
+    wall = time.perf_counter() - t0
+    st = eng.stats["mutations"]
+    return {"delta_frac": frac, "target_delta_rows": target,
+            "qps": len(requests) / max(wall, 1e-12),
+            "delta_rows": st["delta_rows"], "upserts": st["upserts"],
+            "deletes": st["deletes"]}
 
 
 def _assert_smoke(points, shard, requests, spec: BatchSpec, opts):
@@ -223,6 +289,38 @@ def run(quick: bool = False, smoke: bool = False) -> str:
     if smoke:
         _assert_smoke(points, shard, sweep_reqs, spec, opts_f32)
 
+    # -- live-index churn + bulk-vs-loop build comparison ---------------------
+    params = HnswParams(M=12, efc=60, seed=SEED)
+    t0 = time.perf_counter()
+    bulk_idx = build_hnsw_bulk(vecs, params, wave=256)
+    bulk_s = time.perf_counter() - t0
+    rq = synthetic.make_queries(32, dim, dataset_seed=SEED, seed=909)
+    d2 = (np.sum(rq ** 2, 1)[:, None] + np.sum(vecs ** 2, 1)[None, :]
+          - 2.0 * rq @ vecs.T)
+    want = np.argsort(d2, axis=1, kind="stable")[:, :10]
+    rec_seq = _graph_recall(local, rq, want, opts_f32)
+    rec_bulk = _graph_recall(LocalBackend(FavorIndex(bulk_idx, attrs)),
+                             rq, want, opts_f32)
+    churn = [_churn_point(lambda: LocalBackend(FavorIndex(bulk_idx, attrs)),
+                          opts_f32, requests, attrs, frac=frac)
+             for frac in (0.0, 0.01, 0.10)]
+    jpath = update_bench_json("mutation", {
+        "config": {"n": n, "dim": dim, "requests": n_requests},
+        "churn": churn,
+        "bulk_build": {"recall_seq": rec_seq, "recall_bulk": rec_bulk,
+                       "build_s_seq": local.index.build_seconds,
+                       "build_s_bulk": bulk_s},
+    })
+    if smoke:
+        # acceptance: device-parallel bulk build within 1pt of the loop
+        assert abs(rec_seq - rec_bulk) <= 0.01, (rec_seq, rec_bulk)
+        for pt in churn:
+            assert pt["qps"] > 0.0, pt
+            assert pt["delta_rows"] == pt["target_delta_rows"], pt
+            if pt["delta_frac"]:
+                assert pt["upserts"] > pt["target_delta_rows"], pt
+                assert pt["deletes"] > 0, pt
+
     sp = points[-1]  # sharded point
     return (f"shards={n_model} compression={bpv_f32 / bpv_pq:.1f}x "
             + " ".join(summary)
@@ -230,7 +328,13 @@ def run(quick: bool = False, smoke: bool = False) -> str:
               f"{sp['padded']['compiled_shapes']} "
               f"p99 {sp['unpadded']['p99_ms']:.1f}->"
               f"{sp['padded']['p99_ms']:.1f}ms "
-              f"pad={sp['padded']['pad_overhead']:.2f} json={jpath}")
+              f"pad={sp['padded']['pad_overhead']:.2f}"
+            + " | mutation: qps "
+            + "/".join(f"{pt['qps']:.0f}@{pt['delta_frac']:.0%}"
+                       for pt in churn)
+            + f" bulk_recall={rec_bulk:.3f} (seq {rec_seq:.3f}, "
+              f"{local.index.build_seconds:.1f}s->{bulk_s:.1f}s)"
+            + f" json={jpath}")
 
 
 def main() -> None:

@@ -14,9 +14,18 @@ Layer placement follows the online pipeline (estimate -> route -> scan):
     corpus; admission is on the *second* brute miss of a signature so one-off
     filters never pay the O(N) extension computation.
 
-Every call first syncs against ``inner.version()``: an epoch bump drops all
-three layers at once (the cheap, always-correct invalidation granularity for
-batch reindex/attribute refresh workflows).
+Every call first syncs against ``inner.version()``.  Backends that expose
+per-component epochs (``versions()`` -> vectors/attributes/graph, the live
+index subsystem) get *scoped* invalidation: an attributes bump drops the
+selectivity layer (the estimator sample changed), attributes|graph drops the
+candidate layer (cached extensions describe stale base rows), and any bump
+drops the semantic layer (final top-k results can shift under every mutation
+class).  A vectors-only bump -- streaming upsert/delete, which never touches
+the base arrays or the estimator sample -- therefore leaves the selectivity
+and candidate layers warm: the candidate hit path composes the live state at
+serve time (tombstoned base rows masked out, live delta rows folded in), so
+warm blocks still produce exact results.  Backends without ``versions()``
+fall back to the drop-everything epoch bump.
 """
 from __future__ import annotations
 
@@ -79,6 +88,7 @@ class CachingBackend:
         # references keep the identity-keys valid)
         self._sig_memo: list = []
         self._epoch = inner.version()
+        self._versions = self._inner_versions()
         self.invalidations = 0
         # the live BatchSpec, captured in validate() (which router.execute
         # calls before every batch): the cache split re-introduces
@@ -120,13 +130,40 @@ class CachingBackend:
             self._corpus_view = _corpus_view(self.inner)
         return self._corpus_view
 
+    def _inner_versions(self):
+        """Per-component epochs of the inner backend, or None when it only
+        reports an aggregate version (legacy clear-everything granularity)."""
+        fn = getattr(self.inner, "versions", None)
+        return dict(fn()) if fn is not None else None
+
+    def _live_view(self):
+        """The inner backend's (base_alive, delta) live state, or None for
+        static backends / an inactive live path."""
+        fn = getattr(self.inner, "live_view", None)
+        return fn() if fn is not None else None
+
     def _sync_epoch(self) -> None:
         v = self.inner.version()
-        if v != self._epoch:
+        if v == self._epoch:
+            return
+        self.invalidations += 1
+        new = self._inner_versions()
+        if new is None or self._versions is None:
             self.clear()
-            self._epoch = v
-            self.invalidations += 1
             self._corpus_view = None  # re-resolved on next use
+        else:
+            # scoped invalidation (see module docstring for the matrix)
+            attrs_moved = new["attributes"] != self._versions["attributes"]
+            graph_moved = new["graph"] != self._versions["graph"]
+            if attrs_moved:
+                self.selectivity_cache.clear()
+            if attrs_moved or graph_moved:
+                self.candidate_cache.clear()
+                self._brute_seen.clear()
+                self._corpus_view = None  # base arrays were rebuilt
+            self.semantic_cache.clear()
+        self._epoch = v
+        self._versions = new
 
     def clear(self) -> None:
         """Drop every cached entry in all three layers (counters survive)."""
@@ -243,13 +280,38 @@ class CachingBackend:
         mask = F.eval_program(prog, ints, floats)
         return np.nonzero(mask)[0].astype(np.int64)
 
-    def _scan_block(self, queries: np.ndarray, cand: np.ndarray, k: int):
+    def _delta_extension(self, delta, programs: dict, row: int):
+        """Live delta rows matching one program row, as (ids, vectors,
+        norms) ready to fold into a candidate block -- None when the delta
+        contributes nothing (empty, all dead, or no row matches)."""
+        cnt = delta.count
+        if delta.live_count == 0:
+            return None
+        prog = {k: np.asarray(v)[row] for k, v in programs.items()}
+        m = np.asarray(F.eval_program(prog, delta.ints[:cnt],
+                                      delta.floats[:cnt]), bool)
+        m &= delta.alive[:cnt]
+        slots = np.nonzero(m)[0]
+        if not len(slots):
+            return None
+        return (delta.ids[slots], delta.vectors[slots], delta.norms[slots])
+
+    def _scan_block(self, queries: np.ndarray, cand: np.ndarray, k: int,
+                    extra=None):
         """Exact top-k of ``queries`` over the candidate rows: the same
         qn + vn - 2*q.v distance the PreFBF scan computes, restricted to the
-        predicate's true extension (so results match the full scan)."""
+        predicate's true extension (so results match the full scan).
+        ``extra`` -- (ids, vectors, norms) of matching live delta rows --
+        extends the block with out-of-base rows at their global ids."""
         vectors, norms, _, _ = self._corpus()
         v = vectors[cand]                      # (C, d)
         vn = norms[cand]                       # (C,)
+        id_map = cand
+        if extra is not None:
+            eids, ev, en = extra
+            v = np.concatenate([v, ev], axis=0)
+            vn = np.concatenate([vn, en])
+            id_map = np.concatenate([cand, eids])
         qn = np.einsum("bd,bd->b", queries, queries).astype(np.float32)
         d2 = qn[:, None] + vn[None, :] - 2.0 * (queries @ v.T)
         dist = np.sqrt(np.maximum(d2, 0.0), dtype=np.float32)
@@ -261,7 +323,7 @@ class CachingBackend:
             part = np.argpartition(dist, kk - 1, axis=1)[:, :kk]
             pd = np.take_along_axis(dist, part, axis=1)
             order = np.argsort(pd, axis=1, kind="stable")
-            ids[:, :kk] = cand[np.take_along_axis(part, order, axis=1)]
+            ids[:, :kk] = id_map[np.take_along_axis(part, order, axis=1)]
             out[:, :kk] = np.take_along_axis(pd, order, axis=1)
         return ids, out
 
@@ -320,8 +382,21 @@ class CachingBackend:
             blocks[sig] = cand
             hit_rows.setdefault(sig, []).append(int(i))
 
+        lv = self._live_view() if hit_rows else None
         for sig, rows in hit_rows.items():
-            rid, rd = self._scan_block(queries_np[rows], blocks[sig], opts.k)
+            # compose the live state over the cached base extension: dead
+            # base rows drop out, matching live delta rows join at their
+            # global ids -- warm blocks stay exact under streaming mutation
+            cand = blocks[sig]
+            extra = None
+            if lv is not None:
+                if lv.base_alive is not None:
+                    cand = cand[lv.base_alive[cand]]
+                extra = self._delta_extension(lv.delta, programs, rows[0])
+                if lv.base_alive is not None or extra is not None:
+                    self.candidate_cache.composed += len(rows)
+            rid, rd = self._scan_block(queries_np[rows], cand, opts.k,
+                                       extra=extra)
             ids[rows] = rid
             dists[rows] = rd
 
@@ -362,6 +437,7 @@ class CachingBackend:
             "candidates": self.candidate_cache.stats(),
             "semantic": self.semantic_cache.stats(),
             "epoch": self._epoch,
+            "versions": dict(self._versions) if self._versions else None,
             "invalidations": self.invalidations,
         }
         for layer in ("selectivity", "candidates", "semantic"):

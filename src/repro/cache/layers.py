@@ -62,7 +62,11 @@ class SelectivityCache:
 
 
 class CandidateCache:
-    """signature -> matching-ID block for hot low-selectivity filters."""
+    """signature -> matching-ID block for hot low-selectivity filters.
+
+    Blocks store the *base-corpus* extension only; under a live index the
+    backend composes tombstones and delta rows over the block at hit time
+    (counted in ``composed``), so entries survive vector-only mutations."""
 
     def __init__(self, spec: CacheSpec, clock=time.monotonic):
         self.enabled = spec.candidates
@@ -70,6 +74,7 @@ class CandidateCache:
         self.max_ids = spec.candidate_max_ids
         self._lru = LruTtlCache(spec.candidate_cap, spec.ttl_s, clock)
         self.bypasses = 0
+        self.composed = 0   # hits served through live-state composition
 
     def get(self, sig: str) -> np.ndarray | None:
         if not self.enabled:
@@ -92,7 +97,7 @@ class CandidateCache:
 
     def stats(self) -> dict:
         return {**self._lru.stats(), "bypasses": self.bypasses,
-                "enabled": self.enabled}
+                "composed": self.composed, "enabled": self.enabled}
 
 
 @dataclass

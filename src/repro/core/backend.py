@@ -43,6 +43,9 @@ from . import filters as F
 from . import prefbf, selector
 from .options import BuildSpec, SearchOptions
 from .search import favor_graph_search
+from ..index.delta import compose_topk
+from ..index.epochs import ComponentEpochs
+from ..index.live import LiveState
 
 if TYPE_CHECKING:
     from .favor import FavorIndex
@@ -127,8 +130,41 @@ class LocalBackend:
         """Data epoch of the underlying FavorIndex (see Backend.version)."""
         return self.index.version()
 
+    def versions(self) -> dict:
+        """Scoped epochs (index subsystem): vectors / attributes / graph."""
+        return self.index.versions()
+
+    # -- live mutation passthrough (index subsystem) --------------------------
+    def upsert(self, vectors, ints=None, floats=None, *, replace=None):
+        return self.index.upsert(vectors, ints, floats, replace=replace)
+
+    def delete(self, ids):
+        return self.index.delete(ids)
+
+    def merge(self, *, wave: int = 512) -> dict:
+        return self.index.merge(wave=wave)
+
+    def live_view(self):
+        return self.index.live_view()
+
+    def live_stats(self) -> dict:
+        return self.index.live_stats()
+
+    def _delta(self):
+        """The live delta segment when it has rows to serve, else None."""
+        live = self.index.live
+        if live is None or live.delta.live_count == 0:
+            return None
+        return live.delta
+
     def estimate(self, programs: dict, valid=None):
         # pad rows carry always-false programs (p_hat 0) -- no mask needed
+        if self.index.sample_ints.shape[0] == 0:
+            # empty base (delta-only index): no sample to estimate over --
+            # claim p_hat=1 so the router keeps everything on the graph/
+            # compose path rather than trusting a 0/0
+            b = int(next(iter(programs.values())).shape[0])
+            return jnp.ones((b,), jnp.float32)
         return selector.estimate_batched(programs, self.index.sample_ints,
                                          self.index.sample_floats)
 
@@ -136,32 +172,66 @@ class LocalBackend:
                      opts: SearchOptions, valid=None) -> dict:
         idx = self.index
         cfg = opts.search_config()
-        D = exclusion.exclusion_distance(
-            jnp.asarray(p_hat), opts.ef, idx.delta_d, k=opts.k,
-            p_min=idx.sel_cfg.p_min, xp=jnp)
-        return favor_graph_search(idx.g, queries, programs, D, cfg,
-                                  valid=valid)
+        if idx.index.n > 0:
+            D = exclusion.exclusion_distance(
+                jnp.asarray(p_hat), opts.ef, idx.delta_d, k=opts.k,
+                p_min=idx.sel_cfg.p_min, xp=jnp)
+            base = favor_graph_search(idx.g, queries, programs, D, cfg,
+                                      valid=valid)
+        else:
+            b = int(queries.shape[0])
+            base = {"ids": np.full((b, opts.k), -1, np.int64),
+                    "dists": np.full((b, opts.k), np.inf, np.float32),
+                    "hops": np.zeros((b,), np.int32),
+                    "path_td": np.zeros((b,), np.int32)}
+        delta = self._delta()
+        if delta is None:
+            return base
+        gi, gd = delta.scan(queries, programs, k=opts.k, valid=valid)
+        ci, cd = compose_topk(np.asarray(base["ids"]),
+                              np.asarray(base["dists"]), gi, gd, opts.k)
+        out = dict(base)
+        out["ids"], out["dists"] = ci, cd
+        return out
 
     def search_brute(self, queries, programs: dict, opts: SearchOptions,
                      valid=None):
         idx = self.index
         pv, pn, pi, pf = idx._pf
-        if not opts.use_pq:
-            return prefbf.prefbf_topk(pv, pn, pi, pf, queries, programs,
-                                      k=opts.k, chunk=idx.prefbf_chunk,
-                                      use_pallas=opts.use_pallas,
-                                      valid=valid)
-        from ..quant import adc as quant_adc
-        rr = opts.rerank if opts.rerank is not None else idx.rerank
-        if idx.quantize == "pq":
-            return quant_adc.pq_prefbf_topk(
-                idx._codes, pn, pi, pf, queries, programs, idx._cb_dev[0],
-                pv, k=opts.k, rerank=rr, chunk=idx.prefbf_chunk,
-                use_pallas=opts.use_pallas, valid=valid)
-        return quant_adc.sq_prefbf_topk(
-            idx._codes, idx._cb_dev[0], idx._cb_dev[1], pn, pi, pf,
-            queries, programs, pv, k=opts.k, rerank=rr,
-            chunk=idx.prefbf_chunk, valid=valid)
+        if idx.index.n == 0:
+            # empty base (delta-only index): nothing to scan -- and the
+            # chunked reshape cannot infer a -1 axis over zero rows
+            b = int(queries.shape[0])
+            ids = np.full((b, opts.k), -1, np.int64)
+            dists = np.full((b, opts.k), np.inf, np.float32)
+        elif not opts.use_pq:
+            ids, dists = prefbf.prefbf_topk(pv, pn, pi, pf, queries,
+                                            programs, k=opts.k,
+                                            chunk=idx.prefbf_chunk,
+                                            use_pallas=opts.use_pallas,
+                                            valid=valid)
+        else:
+            from ..quant import adc as quant_adc
+            rr = opts.rerank if opts.rerank is not None else idx.rerank
+            if idx.quantize == "pq":
+                ids, dists = quant_adc.pq_prefbf_topk(
+                    idx._codes, pn, pi, pf, queries, programs,
+                    idx._cb_dev[0], pv, k=opts.k, rerank=rr,
+                    chunk=idx.prefbf_chunk, use_pallas=opts.use_pallas,
+                    valid=valid)
+            else:
+                ids, dists = quant_adc.sq_prefbf_topk(
+                    idx._codes, idx._cb_dev[0], idx._cb_dev[1], pn, pi, pf,
+                    queries, programs, pv, k=opts.k, rerank=rr,
+                    chunk=idx.prefbf_chunk, valid=valid)
+        delta = self._delta()
+        if delta is None:
+            return ids, dists
+        # delta rows are scanned exact f32 even under use_pq: the buffer is
+        # tiny, so exactness is free and only sharpens the compressed route
+        gi, gd = delta.scan(queries, programs, k=opts.k, valid=valid)
+        return compose_topk(np.asarray(ids), np.asarray(dists), gi, gd,
+                            opts.k)
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +249,8 @@ class ShardedBackend:
     def __init__(self, mesh, sharded: dist.ShardedFavorArrays,
                  schema: F.Schema, *, sel_cfg=None, codebook=None,
                  rerank: int = 4, prefbf_chunk: int = 65536,
-                 query_axes=("data",), model_axis: str = "model"):
+                 query_axes=("data",), model_axis: str = "model",
+                 hnsw_params=None, seed: int = 0):
         self.mesh = mesh
         self.schema = schema
         self.sel_cfg = sel_cfg or selector.SelectorConfig()
@@ -188,6 +259,8 @@ class ShardedBackend:
         self.query_axes = tuple(query_axes)
         self.model_axis = model_axis
         self.codebook = codebook
+        self.hnsw_params = hnsw_params   # needed by merge() to rebuild shards
+        self.seed = seed
         if codebook is not None and sharded.quant is None:
             sharded = dist.attach_quant(sharded, codebook)
         self.sharded = sharded
@@ -198,7 +271,13 @@ class ShardedBackend:
         self._qmult = 1
         for ax in self.query_axes:
             self._qmult *= mesh.shape[ax]
-        self._epoch = 0
+        # live mutation state (index subsystem): the delta segment is
+        # replicated host-side (it is tiny) and scanned unsharded after the
+        # cross-shard merge; only the tombstone mask is device-sharded
+        self.epochs = ComponentEpochs()
+        self.shard_epochs = [0] * sharded.n_shards
+        self._live: LiveState | None = None
+        self._live_active = False   # db carries an "alive" array
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -243,7 +322,8 @@ class ShardedBackend:
         return cls(mesh, sharded, attrs.schema, sel_cfg=spec.selector,
                    codebook=codebook, rerank=rerank,
                    prefbf_chunk=max(spec.prefbf_chunk, 1),
-                   query_axes=query_axes, model_axis=model_axis)
+                   query_axes=query_axes, model_axis=model_axis,
+                   hnsw_params=spec.hnsw, seed=seed)
 
     # -- serve executables ----------------------------------------------------
     def _fns(self, opts: SearchOptions, *, for_pq: bool = False) -> dict:
@@ -256,13 +336,16 @@ class ShardedBackend:
         rr = self.rerank
         if for_pq and opts.rerank is not None:
             rr = opts.rerank
-        key = (opts.search_config(), rr)
+        # the live flag is part of the key (and the cache is cleared when it
+        # flips): a live DB carries an extra "alive" array, so the shard_map
+        # in_specs of pre-live executables no longer match the db dict
+        key = (opts.search_config(), rr, self._live_active)
         fns = self._fns_cache.get(key)
         if fns is None:
             fns = dist.make_serve_fns(
                 self.mesh, opts.search_config(), prefbf_chunk=self.prefbf_chunk,
                 query_axes=self.query_axes, model_axis=self.model_axis,
-                quant=self.quant, rerank=rr)
+                quant=self.quant, rerank=rr, live=self._live_active)
             self._fns_cache[key] = fns
         return fns
 
@@ -289,11 +372,140 @@ class ShardedBackend:
     def version(self) -> int:
         """Data epoch (see Backend.version); ``bump_version()`` after any
         reshard/re-attach that changes the served rows."""
-        return self._epoch
+        return self.epochs.total
+
+    def versions(self) -> dict:
+        """Scoped epochs (index subsystem): vectors / attributes / graph."""
+        return self.epochs.as_dict()
+
+    def shard_versions(self) -> tuple:
+        """Per-shard mutation counters: shard s moves when a row it owns is
+        tombstoned or its subgraph is rebuilt (merge/reshard)."""
+        return tuple(self.shard_epochs)
 
     def bump_version(self) -> int:
-        self._epoch += 1
-        return self._epoch
+        self.epochs.bump_all()
+        self.shard_epochs = [e + 1 for e in self.shard_epochs]
+        return self.epochs.total
+
+    # -- live mutation API (index subsystem) ----------------------------------
+    def _ensure_live(self) -> LiveState:
+        if self._live is None:
+            a = self.sharded.arrays
+            self._live = LiveState(a["vectors"].shape[0],
+                                   a["vectors"].shape[1],
+                                   a["attrs_int"].shape[1],
+                                   a["attrs_float"].shape[1])
+        return self._live
+
+    def _put_alive(self, alive: np.ndarray) -> None:
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        self.db["alive"] = jax.device_put(
+            np.asarray(alive, bool),
+            NamedSharding(self.mesh, P(self.model_axis)))
+
+    def _apply_tombstones(self, dead_rows: np.ndarray) -> None:
+        if len(dead_rows) == 0:
+            return
+        if not self._live_active:
+            self._live_active = True
+            self._fns_cache.clear()
+        self._put_alive(self._live.base_alive)
+        for r in dead_rows:
+            self.shard_epochs[int(r) // self.sharded.shard_rows] += 1
+
+    def _delta(self):
+        if self._live is None or self._live.delta.live_count == 0:
+            return None
+        return self._live.delta
+
+    def upsert(self, vectors, ints=None, floats=None, *, replace=None):
+        live = self._ensure_live()
+        ids, dead = live.upsert(vectors, ints, floats, replace=replace)
+        self._apply_tombstones(dead)
+        self.epochs.bump("vectors")
+        return ids
+
+    def delete(self, ids):
+        live = self._ensure_live()
+        n, dead = live.delete(ids)
+        self._apply_tombstones(dead)
+        if n:
+            self.epochs.bump("vectors")
+        return n
+
+    def live_view(self):
+        return None if self._live is None else self._live.view()
+
+    def live_stats(self) -> dict:
+        if self._live is None:
+            return {"base_rows": self.sharded.arrays["vectors"].shape[0],
+                    "dead_base_rows": 0, "delta_rows": 0, "delta_slots": 0,
+                    "upserts": 0, "deletes": 0, "replaced": 0,
+                    "missing_deletes": 0}
+        return self._live.stats()
+
+    def merge(self, *, wave: int = 512) -> dict:
+        """Fold the delta into the base: concatenate every delta slot after
+        the base rows (dead slots ride along tombstoned, keeping ids
+        positional), pad to a multiple of the shard count with permanently
+        dead rows, and rebuild the per-shard HNSWs through the bulk-build
+        wave pipeline.  All three epochs move -- the selectivity sample is
+        re-drawn over the new sharding, unlike the local merge."""
+        from ..index.bulk import build_hnsw_bulk
+        live = self._live
+        a = self.sharded.arrays
+        if live is None or live.delta.count == 0:
+            return {"merged_slots": 0, "merged_live": 0,
+                    "n": a["vectors"].shape[0]}
+        if self.quant is not None and self.codebook is None:
+            raise ValueError("cannot merge: codes were pre-attached without "
+                             "a codebook to re-encode the grown DB with")
+        d = live.delta
+        cnt, n_live = d.count, d.live_count
+        vectors = np.concatenate([a["vectors"], d.vectors[:cnt]])
+        ints = np.concatenate([a["attrs_int"], d.ints[:cnt]])
+        floats = np.concatenate([a["attrs_float"], d.floats[:cnt]])
+        alive = live.merged_alive()
+        n_shards = self.sharded.n_shards
+        pad = (-vectors.shape[0]) % n_shards
+        if pad:
+            # shard-alignment rows: zero attrs (NOT the -1/nan padded-row
+            # fill -- the re-drawn estimator sample may include them, and
+            # attr=-1 would shift out of the imask range) and alive=False
+            # forever
+            vectors = np.concatenate(
+                [vectors, np.zeros((pad, vectors.shape[1]), np.float32)])
+            ints = np.concatenate(
+                [ints, np.zeros((pad, ints.shape[1]), np.int32)])
+            floats = np.concatenate(
+                [floats, np.zeros((pad, floats.shape[1]), np.float32)])
+            alive = np.concatenate([alive, np.zeros((pad,), bool)])
+        attrs = F.AttributeTable(self.schema, ints, floats)
+        sharded = dist.build_sharded(
+            vectors, attrs, n_shards, self.hnsw_params,
+            sample_rate=self.sel_cfg.sample_rate, seed=self.seed,
+            min_sample=self.sel_cfg.min_sample,
+            max_sample=self.sel_cfg.max_sample,
+            build_fn=lambda v, p: build_hnsw_bulk(v, p, wave=wave))
+        if self.codebook is not None:
+            sharded = dist.attach_quant(sharded, self.codebook)
+        self.sharded = sharded
+        self.quant = sharded.quant
+        self._live_active = bool(not alive.all())
+        self._fns_cache.clear()
+        self.db = dist.device_put_sharded_db(
+            sharded.arrays, self.mesh,
+            dist.db_specs(self.model_axis, self.quant))
+        if self._live_active:
+            self._put_alive(alive)
+        self.epochs.bump("vectors", "attributes", "graph")
+        self.shard_epochs = [e + 1 for e in self.shard_epochs]
+        live.reset_after_merge(vectors.shape[0],
+                               None if alive.all() else alive)
+        return {"merged_slots": cnt, "merged_live": n_live,
+                "n": vectors.shape[0]}
 
     @property
     def dim(self) -> int:
@@ -324,6 +536,7 @@ class ShardedBackend:
 
     def search_graph(self, queries, programs: dict, p_hat,
                      opts: SearchOptions, valid=None) -> dict:
+        q0, programs0, valid0 = queries, programs, valid
         queries, programs, valid, b = self._pad(queries, programs, valid)
         p_hat = jnp.asarray(p_hat, jnp.float32)
         pad = queries.shape[0] - p_hat.shape[0]
@@ -331,15 +544,28 @@ class ShardedBackend:
             p_hat = jnp.concatenate([p_hat, jnp.repeat(p_hat[-1:], pad)])
         ids, dists = self._fns(opts)["serve_graph_phat"](
             self.db, queries, programs, p_hat, valid)
-        return {"ids": np.asarray(ids)[:b], "dists": np.asarray(dists)[:b]}
+        ids, dists = np.asarray(ids)[:b], np.asarray(dists)[:b]
+        delta = self._delta()
+        if delta is not None:
+            # delta rows are host-replicated -- scan them unsharded on the
+            # original (un-padded) batch and fold into the merged top-k
+            gi, gd = delta.scan(q0, programs0, k=opts.k, valid=valid0)
+            ids, dists = compose_topk(ids, dists, gi, gd, opts.k)
+        return {"ids": ids, "dists": dists}
 
     def search_brute(self, queries, programs: dict, opts: SearchOptions,
                      valid=None):
+        q0, programs0, valid0 = queries, programs, valid
         queries, programs, valid, b = self._pad(queries, programs, valid)
         fn = "serve_brute_pq" if opts.use_pq else "serve_brute"
         fns = self._fns(opts, for_pq=opts.use_pq)
         ids, dists = fns[fn](self.db, queries, programs, valid)
-        return np.asarray(ids)[:b], np.asarray(dists)[:b]
+        ids, dists = np.asarray(ids)[:b], np.asarray(dists)[:b]
+        delta = self._delta()
+        if delta is not None:
+            gi, gd = delta.scan(q0, programs0, k=opts.k, valid=valid0)
+            ids, dists = compose_topk(ids, dists, gi, gd, opts.k)
+        return ids, dists
 
     # -- accounting -----------------------------------------------------------
     def bytes_per_vector(self, quantized: bool = False) -> int:

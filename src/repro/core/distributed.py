@@ -45,12 +45,14 @@ def largest_divisor(n: int, cap: int) -> int:
 # ---------------------------------------------------------------------------
 # Sharded index container
 # ---------------------------------------------------------------------------
-def db_specs(model_axis: str = "model", quant: str | None = None) -> dict:
+def db_specs(model_axis: str = "model", quant: str | None = None,
+             live: bool = False) -> dict:
     """Partition specs for the serve DB dict.
 
     ``quant`` extends the base layout with the compressed-scan arrays:
     "codes" rows are co-sharded with their vectors on ``model_axis``; the
-    (tiny) codebook tables are replicated on every device.
+    (tiny) codebook tables are replicated on every device.  ``live`` adds
+    the tombstone mask ("alive", row-co-sharded) of a mutated backend.
     """
     sh = {
         "vectors": P(model_axis, None), "norms": P(model_axis),
@@ -59,6 +61,8 @@ def db_specs(model_axis: str = "model", quant: str | None = None) -> dict:
         "entry": P(model_axis), "delta_d": P(model_axis),
         "sample_int": P(model_axis, None), "sample_float": P(model_axis, None),
     }
+    if live:
+        sh["alive"] = P(model_axis)
     if quant is not None:
         sh["codes"] = P(model_axis, None)
         if quant == "pq":
@@ -115,16 +119,22 @@ def attach_quant(sharded: ShardedFavorArrays, codebook) -> ShardedFavorArrays:
 def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
                   params: HnswParams | None = None, sample_rate: float = 0.01,
                   seed: int = 0, min_sample: int = 8,
-                  max_sample: int = 65536) -> ShardedFavorArrays:
+                  max_sample: int = 65536,
+                  build_fn=None) -> ShardedFavorArrays:
     """Partition rows round-robin-contiguously, build one HNSW per shard.
 
     ``min_sample``/``max_sample`` bound the TOTAL selectivity-sample size
     (split evenly across shards) exactly like SelectorConfig bounds the
     single-host sample, so the psum-combined p_hat matches the single-host
     estimator's variance and both backends take the same routes -- and the
-    per-batch jitted estimate stays O(max_sample) however large the DB."""
+    per-batch jitted estimate stays O(max_sample) however large the DB.
+
+    ``build_fn(vectors, params) -> HnswIndex`` overrides the per-shard build
+    (default sequential ``build_hnsw``; pass ``index.bulk.build_hnsw_bulk``
+    for the device-parallel wave pipeline)."""
     n = vectors.shape[0]
     assert n % n_shards == 0, "row count must divide the model axis"
+    build_fn = build_fn or build_hnsw
     ns = n // n_shards
     parts = []
     max_lup = 0
@@ -133,7 +143,7 @@ def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
         p = params or HnswParams()
         p = HnswParams(M=p.M, M0=p.M0, efc=p.efc, ml=p.ml, alpha=p.alpha,
                        heuristic=p.heuristic, seed=p.seed + s)
-        idx = build_hnsw(vectors[sl], p)
+        idx = build_fn(vectors[sl], p)
         parts.append((idx, sl))
         max_lup = max(max_lup, len(idx.levels) - 1)
 
@@ -216,7 +226,7 @@ def _merge_topk(local_d, local_i, k: int, axis: str):
 def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
                    prefbf_chunk: int = 65536, query_axes=("data",),
                    model_axis: str = "model", quant: str | None = None,
-                   rerank: int = 4):
+                   rerank: int = 4, live: bool = False):
     """Build the jitted sharded serve steps for ``mesh``.
 
     Returns dict with:
@@ -252,7 +262,14 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
                   "flo": P(qspec[0], None, None), "fhi": P(qspec[0], None, None)}
     vspec = P(qspec[0])  # (B,) validity mask, co-sharded with the queries
     ef = ef_sel or cfg.ef
-    dspecs = db_specs(model_axis, quant)
+    dspecs = db_specs(model_axis, quant, live)
+
+    def _scan_norms(db):
+        """Per-shard norms for the brute scans: with a live DB, tombstoned
+        rows take +inf (the padded-row convention) so they can never win."""
+        if live:
+            return jnp.where(db["alive"], db["norms"], jnp.inf)
+        return db["norms"]
 
     # -- selectivity estimate (psum-combined; identical on all shards) -------
     def _estimate(db, programs):
@@ -283,6 +300,8 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
             "entry": db["entry"][0],
             "attrs_int": db["attrs_int"], "attrs_float": db["attrs_float"],
         }
+        if live:
+            local_g["alive"] = db["alive"]
         if cfg.graph_quant is not None:
             # scorer arrays (core.scoring): each shard scores its own code
             # rows; the replicated codebook tables ride along
@@ -330,8 +349,8 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
             # (the kernel pads the shard's row count internally)
             chunk = min(chunk, 512)
         ids, d = prefbf.prefbf_topk(
-            db["vectors"], db["norms"], db["attrs_int"], db["attrs_float"],
-            queries, programs, k=cfg.k, chunk=chunk,
+            db["vectors"], _scan_norms(db), db["attrs_int"],
+            db["attrs_float"], queries, programs, k=cfg.k, chunk=chunk,
             use_pallas=cfg.use_pallas, valid=valid)
         shard = jax.lax.axis_index(model_axis).astype(jnp.int32)
         gids = jnp.where(ids >= 0, ids + shard * n_local, -1)
@@ -361,15 +380,16 @@ def make_serve_fns(mesh: Mesh, cfg: SearchConfig, *, ef_sel: int | None = None,
             fallback has no kernel and ignores the flag, like LocalBackend)."""
             n_local = db["norms"].shape[0]
             chunk = largest_divisor(n_local, prefbf_chunk)
+            norms = _scan_norms(db)
             if quant == "pq":
                 ids, d = quant_adc.pq_prefbf_topk(
-                    db["codes"], db["norms"], db["attrs_int"],
+                    db["codes"], norms, db["attrs_int"],
                     db["attrs_float"], queries, programs, db["centroids"],
                     db["vectors"], k=cfg.k, rerank=rerank, chunk=chunk,
                     use_pallas=cfg.use_pallas, valid=valid)
             else:
                 ids, d = quant_adc.sq_prefbf_topk(
-                    db["codes"], db["sq_lo"], db["sq_scale"], db["norms"],
+                    db["codes"], db["sq_lo"], db["sq_scale"], norms,
                     db["attrs_int"], db["attrs_float"], queries, programs,
                     db["vectors"], k=cfg.k, rerank=rerank, chunk=chunk,
                     valid=valid)

@@ -28,7 +28,9 @@ from . import prefbf, selectivity, selector
 from .hnsw import HnswIndex, HnswParams, build_hnsw
 from .options import BuildSpec, QuantSpec, SearchOptions
 from .router import SearchResult, compile_programs, execute
-from .search import graph_arrays
+from .search import graph_arrays, refresh_graph_arrays
+from ..index.epochs import ComponentEpochs
+from ..index.live import LiveState
 
 __all__ = ["FavorIndex", "SearchResult"]
 
@@ -62,7 +64,8 @@ class FavorIndex:
     Backend protocol (and the same ServeEngine)."""
 
     def __init__(self, index: HnswIndex, attrs: F.AttributeTable,
-                 spec: BuildSpec | None = None, *, codebook=None, **legacy):
+                 spec: BuildSpec | None = None, *, codebook=None,
+                 codes=None, **legacy):
         if isinstance(spec, selector.SelectorConfig):
             # pre-1.1 third positional was sel_cfg
             if legacy.get("sel_cfg") is not None:
@@ -126,6 +129,14 @@ class FavorIndex:
                                        self.prefbf_chunk)
         self._pf = (jnp.asarray(pv), jnp.asarray(pn), jnp.asarray(pi),
                     jnp.asarray(pf))
+        # pristine padded norms, kept so tombstones can be (re)masked onto
+        # the scan arrays without re-reading the host copy
+        self._pn0 = self._pf[1]
+
+        # -- live mutation state (index subsystem) ----------------------------
+        self.epochs = ComponentEpochs()
+        self.live: LiveState | None = None
+        self._alive: np.ndarray | None = None   # base-row tombstone mask
 
         # -- optional compressed-domain scan state (quant subsystem) ---------
         q = spec.quant
@@ -143,13 +154,21 @@ class FavorIndex:
         self.quantize = q.kind if q is not None else None
         self.rerank = q.rerank if q is not None else 4
         self.codebook = codebook
-        self._epoch = 0
         self._codes = None
         self._cb_dev = None
         self._backend = None
+        if codes is not None and q is None:
+            raise ValueError("codes= supplied but the index requests no "
+                             "quantization (spec.quant is None and no "
+                             "codebook was given)")
         if q is not None:
             from .. import quant
             if codebook is None:
+                if index.n == 0:
+                    raise ValueError(
+                        "cannot train a codebook on an empty index; pass "
+                        "codebook= (or build unquantized and re-quantize "
+                        "after the first merge)")
                 if q.kind == "pq":
                     codebook = quant.train_pq(
                         index.vectors, m=q.m, nbits=q.nbits,
@@ -161,7 +180,19 @@ class FavorIndex:
             # encode the *padded* DB so code rows align with the _pf arrays
             # (padded rows encode the zero vector; their +inf norms gate them
             # out of the compressed scan)
-            self._codes = jnp.asarray(quant.encode(codebook, pv))
+            if codes is not None:
+                codes = np.asarray(codes)
+                if codes.shape[0] != index.n:
+                    raise ValueError(f"codes= carries {codes.shape[0]} rows "
+                                     f"for an index of {index.n}")
+                pad = pv.shape[0] - index.n
+                if pad:
+                    codes = np.concatenate([
+                        codes, quant.encode(
+                            codebook, np.zeros((pad, index.dim), np.float32))])
+                self._codes = jnp.asarray(codes)
+            else:
+                self._codes = jnp.asarray(quant.encode(codebook, pv))
             if q.kind == "pq":
                 self._cb_dev = (jnp.asarray(codebook.centroids),)
             else:
@@ -203,20 +234,150 @@ class FavorIndex:
             self.g["sq_lo"], self.g["sq_scale"] = self._cb_dev
 
     def version(self) -> int:
-        """Data epoch consumed by layered caches (Backend.version)."""
-        return self._epoch
+        """Aggregate data epoch consumed by layered caches
+        (Backend.version): any component bump changes it."""
+        return self.epochs.total
 
-    def bump_version(self) -> int:
-        """Mark the served rows as changed (rebuild, attribute update):
-        CachingBackend wrappers drop every cached entry on the next call,
-        and the memoized graph arrays are re-uploaded under the new epoch
-        (an in-place attrs edit would otherwise keep serving the stale
-        device copies)."""
-        self._epoch += 1
-        self.g = dict(graph_arrays(self.index, self.attrs,
-                                   version=self._epoch))
+    def versions(self) -> dict:
+        """Scoped epochs (vectors / attributes / graph) for caches that
+        invalidate per component instead of dropping everything."""
+        return self.epochs.as_dict()
+
+    def bump_version(self, components: tuple[str, ...] | None = None) -> int:
+        """Mark served rows as changed (rebuild, attribute update):
+        CachingBackend wrappers invalidate on the next call and the memoized
+        graph arrays are re-uploaded under the new epoch (an in-place attrs
+        edit would otherwise keep serving the stale device copies).
+
+        ``components`` (subset of vectors/attributes/graph) scopes the bump:
+        only the named components' device arrays are re-uploaded (the rest
+        are reused from the current dict) and only their epochs move.  None
+        keeps the legacy bump-everything behavior.
+        """
+        if components is None:
+            self.epochs.bump_all()
+            self.g = dict(graph_arrays(self.index, self.attrs,
+                                       version=self.epochs.total))
+        else:
+            self.epochs.bump(*components)
+            self.g = dict(refresh_graph_arrays(
+                self.index, self.attrs, base=self.g,
+                changed=tuple(components), version=self.epochs.total))
         self._attach_scorer_arrays()
-        return self._epoch
+        if self._alive is not None:
+            self.g["alive"] = jnp.asarray(self._alive)
+        return self.epochs.total
+
+    # -- live mutation API (index subsystem) ----------------------------------
+    def _ensure_live(self) -> LiveState:
+        if self.live is None:
+            self.live = LiveState(self.index.n, self.index.dim,
+                                  self.attrs.ints.shape[1],
+                                  self.attrs.floats.shape[1])
+        return self.live
+
+    def _apply_tombstones(self, dead_rows: np.ndarray) -> None:
+        """Thread newly-dead base rows onto the device arrays: an ``alive``
+        key for the graph traversal and +inf norms for every brute scan.
+        Nothing else re-uploads -- vectors/neighbors/attrs stay put."""
+        if len(dead_rows) == 0:
+            return
+        alive = self.live.base_alive
+        self._alive = alive
+        self.g["alive"] = jnp.asarray(alive)
+        pad = self._pn0.shape[0] - self.index.n
+        alive_pad = np.concatenate([alive, np.ones((pad,), bool)])
+        self._pf = (self._pf[0],
+                    jnp.where(jnp.asarray(alive_pad), self._pn0, jnp.inf),
+                    self._pf[2], self._pf[3])
+
+    def upsert(self, vectors: np.ndarray, ints=None, floats=None, *,
+               replace=None) -> np.ndarray:
+        """Stream rows into the live delta; returns their ids (positional:
+        ``base_n + slot``).  ``replace=`` retires the named ids first (an
+        update is delete + fresh insert; the new ids are the handles)."""
+        live = self._ensure_live()
+        ids, dead = live.upsert(vectors, ints, floats, replace=replace)
+        self._apply_tombstones(dead)
+        self.epochs.bump("vectors")
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone ids (base rows or unmerged delta rows); returns how
+        many were found alive."""
+        live = self._ensure_live()
+        n, dead = live.delete(ids)
+        self._apply_tombstones(dead)
+        if n:
+            self.epochs.bump("vectors")
+        return n
+
+    def live_view(self):
+        return None if self.live is None else self.live.view()
+
+    def live_stats(self) -> dict:
+        if self.live is None:
+            return {"base_rows": self.index.n, "dead_base_rows": 0,
+                    "delta_rows": 0, "delta_slots": 0, "upserts": 0,
+                    "deletes": 0, "replaced": 0, "missing_deletes": 0}
+        return self.live.stats()
+
+    def merge(self, *, wave: int = 512) -> dict:
+        """Fold the delta segment into the base HNSW (device-parallel bulk
+        build) and return to the static fast path.
+
+        Every delta *slot* is appended in order -- dead slots ride along as
+        tombstoned, unlinked rows -- so surviving ids keep their positions.
+        The selectivity sample is intentionally left untouched: base rows
+        keep their ids and their attributes, so the estimator (and any
+        selectivity cache over it) stays warm across merges.
+        """
+        from ..index.bulk import bulk_add
+        live = self.live
+        if live is None or live.delta.count == 0:
+            return {"merged_slots": 0, "merged_live": 0, "n": self.index.n}
+        d = live.delta
+        cnt = d.count
+        n_live = d.live_count
+        new_index = bulk_add(self.index, d.vectors[:cnt], wave=wave,
+                             link=d.alive[:cnt])
+        new_attrs = F.AttributeTable(
+            self.schema,
+            np.concatenate([self.attrs.ints, d.ints[:cnt]]),
+            np.concatenate([self.attrs.floats, d.floats[:cnt]]))
+        alive = live.merged_alive()
+        self._alive = None if alive.all() else alive
+        self.index = new_index
+        self.attrs = new_attrs
+
+        self.prefbf_chunk = min(self.spec.prefbf_chunk,
+                                max(256, new_index.n))
+        pv, pn, pi, pf = prefbf.pad_db(new_index.vectors,
+                                       new_index.norms.astype(np.float32),
+                                       new_attrs.ints, new_attrs.floats,
+                                       self.prefbf_chunk)
+        self._pn0 = jnp.asarray(pn)
+        if self._alive is not None:
+            pad = pn.shape[0] - new_index.n
+            alive_pad = np.concatenate([self._alive, np.ones((pad,), bool)])
+            pn = np.where(alive_pad, pn, np.inf).astype(np.float32)
+        self._pf = (jnp.asarray(pv), jnp.asarray(pn), jnp.asarray(pi),
+                    jnp.asarray(pf))
+        if self.codebook is not None:
+            from .. import quant
+            self._codes = jnp.asarray(quant.encode(self.codebook, pv))
+
+        # vectors (membership) and graph (base arrays rebuilt) move;
+        # attributes deliberately do not -- the estimator sample is untouched
+        self.epochs.bump("vectors", "graph")
+        self.g = dict(graph_arrays(self.index, self.attrs,
+                                   version=self.epochs.total))
+        self._attach_scorer_arrays()
+        if self._alive is not None:
+            self.g["alive"] = jnp.asarray(self._alive)
+        live.reset_after_merge(new_index.n, self._alive)
+        return {"merged_slots": cnt, "merged_live": n_live,
+                "n": new_index.n}
 
     @property
     def backend(self):
@@ -265,8 +426,29 @@ class FavorIndex:
         return 4 * self.index.dim
 
     # -- persistence -----------------------------------------------------------
+    def _quant_payload(self) -> dict | None:
+        """Quantization state persisted inside the .hnsw.npz: the codebook
+        tables AND the encoded codes (unpadded), so a reloaded index serves
+        use_pq / graph_quant without re-training or re-encoding."""
+        if self.codebook is None:
+            return None
+        payload = {"kind": self.quantize, "dim": self.codebook.dim,
+                   "codes": np.asarray(self._codes)[: self.index.n]}
+        if self.quantize == "pq":
+            payload["centroids"] = np.asarray(self.codebook.centroids)
+        else:
+            payload["lo"] = np.asarray(self.codebook.lo)
+            payload["scale"] = np.asarray(self.codebook.scale)
+        return payload
+
     def save(self, path: str) -> None:
-        self.index.save(path + ".hnsw.npz")
+        if self.live is not None and (self.live.delta.count
+                                      or self.live.has_tombstones):
+            warnings.warn(
+                "FavorIndex.save: unmerged live mutations (delta rows or "
+                "tombstones) are not persisted -- call merge() first",
+                stacklevel=2)
+        self.index.save(path + ".hnsw.npz", quant=self._quant_payload())
         np.savez_compressed(path + ".attrs.npz", ints=self.attrs.ints,
                             floats=self.attrs.floats,
                             kinds=np.array([c.kind for c in self.schema.columns]),
@@ -284,8 +466,28 @@ class FavorIndex:
             F.ColumnSpec(str(n), str(k), int(v) if str(k) == "int" else None)
             for n, k, v in zip(z["names"], z["kinds"], z["vocabs"]))
         attrs = F.AttributeTable(F.Schema(cols), z["ints"], z["floats"])
-        qpath = path + ".quant.npz"
-        if os.path.exists(qpath) and kw.get("codebook") is None:
-            from ..quant import load_codebook
-            kw["codebook"] = load_codebook(qpath)  # quant kind is inferred
+        qs = index.quant_state
+        if qs is not None and kw.get("codebook") is None:
+            from ..quant import PQCodebook, SQCodebook
+            if qs["kind"] == "pq":
+                kw["codebook"] = PQCodebook(qs["centroids"], int(qs["dim"]))
+            else:
+                kw["codebook"] = SQCodebook(qs["lo"], qs["scale"],
+                                            int(qs["dim"]))
+            kw.setdefault("codes", qs["codes"])
+        elif kw.get("codebook") is None:
+            qpath = path + ".quant.npz"
+            if os.path.exists(qpath):
+                from ..quant import load_codebook
+                kw["codebook"] = load_codebook(qpath)  # kind is inferred
+            elif spec is not None and spec.quant is not None:
+                raise ValueError(
+                    f"spec requests quant kind={spec.quant.kind!r} but "
+                    f"{path!r} was saved without quantization state; rebuild "
+                    "with a QuantSpec or pass codebook= explicitly")
+        qs_kind = qs["kind"] if qs is not None else None
+        if (qs_kind is not None and spec is not None and spec.quant is not None
+                and spec.quant.kind != qs_kind):
+            raise ValueError(f"spec requests quant kind={spec.quant.kind!r} "
+                             f"but the saved index carries {qs_kind!r}")
         return FavorIndex(index, attrs, spec, **kw)

@@ -48,11 +48,15 @@ class HnswIndex:
     vectors: np.ndarray          # (N, d) float32
     levels: list[np.ndarray]     # levels[l]: (N, M_l) int32 neighbor ids, -1 pad
     node_level: np.ndarray       # (N,) int16 topmost level of each node
-    entry_point: int
+    entry_point: int             # -1 when the graph has no linked node
     max_level: int
     delta_d: float
     params: HnswParams
     norms: np.ndarray = field(default=None)  # (N,) |v|^2 cache
+    # persisted quantization state (save/load round-trips it alongside the
+    # graph arrays): {"kind": "pq"|"sq", "codes": (N, *) uint8, "dim": int,
+    # plus the codebook tables} -- None when the index carries no codes
+    quant_state: dict | None = field(default=None, repr=False)
 
     def __post_init__(self):
         if self.norms is None:
@@ -76,8 +80,14 @@ class HnswIndex:
             b += lv.nbytes
         return b
 
-    def save(self, path: str) -> None:
+    def save(self, path: str, quant: dict | None = None) -> None:
+        """Persist the index; ``quant`` (or ``self.quant_state``) rides along
+        under ``quant_*`` keys so a reloaded index can serve the compressed
+        routes without re-training or re-encoding."""
         arrs = {f"level_{l}": lv for l, lv in enumerate(self.levels)}
+        q = quant if quant is not None else self.quant_state
+        if q is not None:
+            arrs.update({f"quant_{k}": np.asarray(v) for k, v in q.items()})
         np.savez_compressed(
             path, vectors=self.vectors, node_level=self.node_level,
             entry_point=self.entry_point, max_level=self.max_level,
@@ -93,6 +103,19 @@ class HnswIndex:
         M, M0, efc, alpha, seed = (int(x) for x in z["params"])
         params = HnswParams(M=M, M0=M0, efc=efc, alpha=alpha, seed=seed,
                             ml=float(z["ml"]))
+        quant_state = None
+        qkeys = [k for k in z.files if k.startswith("quant_")]
+        if qkeys:
+            quant_state = {}
+            for k in qkeys:
+                v = z[k]
+                name = k[len("quant_"):]
+                if name == "kind":
+                    quant_state[name] = str(v)
+                elif name == "dim":
+                    quant_state[name] = int(v)
+                else:
+                    quant_state[name] = v
         return HnswIndex(
             vectors=z["vectors"],
             levels=[z[f"level_{l}"] for l in range(n_levels)],
@@ -101,6 +124,7 @@ class HnswIndex:
             max_level=int(z["max_level"]),
             delta_d=float(z["delta_d"]),
             params=params,
+            quant_state=quant_state,
         )
 
 
@@ -209,19 +233,40 @@ class _Builder:
         self.adj[node][level] = self._select_arrays(ids[order], ds[order], m)
 
     # -- insertion ------------------------------------------------------------
-    def insert(self, q: np.ndarray) -> int:
+    def _register(self, q: np.ndarray, lvl: int) -> int:
+        """Allocate a node row (vector + empty adjacency) without linking."""
         node = self.n
         self.vectors[node] = q
         self.norms[node] = float(q @ q)
-        lvl = int(-math.log(max(self.rng.random(), 1e-12)) * self.p.ml)
         self.adj.append([[] for _ in range(lvl + 1)])
         self.node_level.append(lvl)
         self.n += 1
+        return node
 
+    def record_curve(self, curve: np.ndarray) -> None:
+        """Eq. 5 slope from one node's ascending candidate-distance curve
+        (approximate alpha-th / beta-th nearest neighbors, section 6.3.1).
+        Shared by the sequential insert loop and the bulk-build path."""
+        if len(curve) < 2:
+            return
+        a = min(self.p.alpha, len(curve)) - 1
+        b = len(curve) - 1
+        if b > a:
+            self._d_alpha_sum += float(curve[a])
+            self._d_beta_sum += float(curve[b])
+            self._d_span_sum += float(b - a)
+            self._d_count += 1
+
+    def draw_level(self) -> int:
+        return int(-math.log(max(self.rng.random(), 1e-12)) * self.p.ml)
+
+    def _link_node(self, node: int, q: np.ndarray, lvl: int) -> None:
+        """Descend + per-level candidate search + reciprocal linking for an
+        already-registered node (the body of the standard insert)."""
         if self.entry_point < 0:
             self.entry_point = node
             self.max_level = lvl
-            return node
+            return
 
         ep = self.entry_point
         d_ep = float(self._dist_many(q, np.asarray([ep]))[0])
@@ -231,17 +276,8 @@ class _Builder:
 
         for level in range(min(lvl, self.max_level), -1, -1):
             cands = self._search_layer(q, eps, self.p.efc, level)
-            if level == 0 and len(cands) >= 2:
-                # Eq. 5 slope from this node's candidate curve (approximate
-                # alpha-th / beta-th nearest neighbors, paper section 6.3.1)
-                curve = np.asarray([d for d, _ in cands])
-                a = min(self.p.alpha, len(curve)) - 1
-                b = len(curve) - 1
-                if b > a:
-                    self._d_alpha_sum += float(curve[a])
-                    self._d_beta_sum += float(curve[b])
-                    self._d_span_sum += float(b - a)
-                    self._d_count += 1
+            if level == 0:
+                self.record_curve(np.asarray([d for d, _ in cands]))
             m = self.p.M0 if level == 0 else self.p.M
             sel = self._select(cands, m)
             self.adj[node][level] = list(sel)
@@ -252,13 +288,20 @@ class _Builder:
         if lvl > self.max_level:
             self.max_level = lvl
             self.entry_point = node
+
+    def insert(self, q: np.ndarray) -> int:
+        node = self._register(q, self.draw_level())
+        self._link_node(node, q, self.node_level[node])
         return node
 
     # -- finalize --------------------------------------------------------------
     def finalize(self) -> HnswIndex:
         n = self.n
         levels: list[np.ndarray] = []
-        for level in range(self.max_level + 1):
+        # always emit level 0, even for an empty or all-unlinked builder:
+        # downstream consumers (graph_arrays, the sharded flatten) index
+        # levels[0] unconditionally
+        for level in range(max(self.max_level, 0) + 1):
             m = self.p.M0 if level == 0 else self.p.M
             arr = np.full((n, m), -1, np.int32)
             for v in range(n):

@@ -88,7 +88,10 @@ def plan_routes(p_hat: np.ndarray, lam: float,
     a typo'd route name raises instead of silently auto-routing)."""
     if force not in ROUTES:
         raise ValueError(f"force must be one of {ROUTES}, got {force!r}")
-    p_hat = np.asarray(p_hat)
+    # a NaN estimate (empty selectivity sample: freshly-created live index
+    # with no merged base) routes as p_hat=1 -- graph side, where the
+    # delta-compose path serves it
+    p_hat = np.nan_to_num(np.asarray(p_hat, np.float32), nan=1.0)
     if force == "brute":
         brute = np.ones(p_hat.shape, bool)
     elif force == "graph":

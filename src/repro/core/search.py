@@ -128,6 +128,62 @@ def graph_arrays(index: HnswIndex, attrs: F.AttributeTable,
     return g
 
 
+# which graph_arrays keys each epoch component owns: a refresh re-uploads
+# only the keys of the components that actually changed
+_COMPONENT_KEYS = {
+    "vectors": ("vectors", "norms"),
+    "graph": ("neighbors0", "upper", "entry"),
+    "attributes": ("attrs_int", "attrs_float"),
+}
+
+
+def refresh_graph_arrays(index: HnswIndex, attrs: F.AttributeTable,
+                         *, base: dict, changed: tuple[str, ...],
+                         version: int) -> dict:
+    """Incremental re-memoization after a mutation: build the dict for the
+    new ``version`` by REUSING the device arrays of every component not in
+    ``changed`` from ``base`` (the previous graph_arrays dict) and uploading
+    only what moved.  A delete-only mutation, for example, re-uploads
+    *nothing* here -- the tombstone mask is a separate ``alive`` key the
+    caller overlays.  Extra keys on ``base`` (scorer codes, alive) are the
+    caller's to carry; this handles the canonical seven only.
+    """
+    for c in changed:
+        if c not in _COMPONENT_KEYS:
+            raise ValueError(f"unknown component {c!r}; "
+                             f"expected one of {tuple(_COMPONENT_KEYS)}")
+    key = (id(index), id(attrs), int(version))
+    hit = _GRAPH_ARRAYS_CACHE.get(key)
+    if hit is not None:
+        iref, aref, g = hit
+        if iref() is index and aref() is attrs:
+            return g
+        del _GRAPH_ARRAYS_CACHE[key]
+
+    def _evict(k=key):
+        _GRAPH_ARRAYS_CACHE.pop(k, None)
+
+    g = {k: base[k] for ks in _COMPONENT_KEYS.values() for k in ks}
+    if "vectors" in changed:
+        g["vectors"] = jnp.asarray(index.vectors)
+        g["norms"] = jnp.asarray(index.norms.astype(np.float32))
+    if "graph" in changed:
+        upper = (np.stack(index.levels[1:], axis=0) if index.max_level >= 1
+                 else np.zeros((0, index.n, index.params.M), np.int32))
+        g["neighbors0"] = jnp.asarray(index.levels[0])
+        g["upper"] = jnp.asarray(upper)
+        g["entry"] = jnp.asarray(index.entry_point, jnp.int32)
+    if "attributes" in changed:
+        g["attrs_int"] = jnp.asarray(attrs.ints)
+        g["attrs_float"] = jnp.asarray(attrs.floats)
+    while len(_GRAPH_ARRAYS_CACHE) >= _GRAPH_ARRAYS_CAP:
+        _GRAPH_ARRAYS_CACHE.pop(next(iter(_GRAPH_ARRAYS_CACHE)))
+    _GRAPH_ARRAYS_CACHE[key] = (weakref.ref(index), weakref.ref(attrs), g)
+    weakref.finalize(index, _evict)
+    weakref.finalize(attrs, _evict)
+    return g
+
+
 # ---------------------------------------------------------------------------
 # Packed visited set: (B, ceil(N/32)) uint32 bitfield
 # ---------------------------------------------------------------------------
@@ -226,6 +282,12 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
     ef, ccap = cfg.ef, cfg.ccap
     rows = jnp.arange(B)
 
+    # optional live-index tombstone mask (N,) bool: dead nodes stay routable
+    # (their edges still carry the walk) but are never admitted to R -- the
+    # key is absent until the first delete, so static indexes trace the
+    # exact pre-live program and stay bit-identical
+    alive = g.get("alive")
+
     sstate = scorer.prepare(g, queries, programs)
     ep = _descend(g, queries, scorer, sstate)        # (B,)
 
@@ -234,6 +296,8 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
     ep_td = F.eval_program_gathered(
         programs, g["attrs_int"][ep][:, None, :],
         g["attrs_float"][ep][:, None, :], xp=jnp)[:, 0]
+    if alive is not None:
+        ep_td = ep_td & alive[ep]
     ep_key = exclusion_compose(ep_d, ep_td, D)       # rsf: D = 0 -> plain d
     seed_ok = ep_td if rsf else jnp.ones((B,), bool)
 
@@ -294,6 +358,8 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
         d = scorer.score_block(g, sstate, safe)
         td = F.eval_program_gathered(
             programs, g["attrs_int"][safe], g["attrs_float"][safe], xp=jnp)
+        if alive is not None:
+            td = td & alive[safe]
         key = exclusion_compose(d, td, D[:, None])   # Eq. 2
 
         # -- pool insertion (lines 15-24) -------------------------------------
@@ -312,6 +378,8 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
         va_td = F.eval_program_gathered(
             programs, g["attrs_int"][va_safe][:, None, :],
             g["attrs_float"][va_safe][:, None, :], xp=jnp)[:, 0]
+        if alive is not None:
+            va_td = va_td & alive[va_safe]
         return {
             "cand_d": cand_d, "cand_i": cand_i,
             "res_d": res_d, "res_i": res_i, "res_t": res_t,

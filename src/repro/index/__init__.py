@@ -1,0 +1,28 @@
+"""Live-index mutation subsystem: streaming upsert/delete over a built index.
+
+The serving index stays a *static* artifact (the HNSW arrays + padded scan
+arrays uploaded once); mutations accumulate beside it in three small pieces
+that every query path composes at serve time:
+
+  DeltaSegment     -- append-only buffer of fresh rows, brute-scanned per
+                      query (exact f32 PreFBF over a pow-2-padded buffer)
+                      and top-k-merged into every route's results.
+  tombstones       -- a base-row alive bitmask threaded through the existing
+                      +inf-norm / validity-mask plumbing, so dead ids never
+                      surface from the graph, brute or cache paths.
+  ComponentEpochs  -- scoped version counters (vectors / attributes / graph)
+                      so layered caches invalidate surgically instead of
+                      dropping everything on any change.
+
+``merge()`` (index.bulk) folds the delta back into the HNSW with a
+device-parallel bulk build, returning the index to the static fast path.
+IDs are dense row positions: a replaced row retires its id and the new row
+gets a fresh one, so merge never renumbers surviving rows.
+"""
+from .bulk import build_hnsw_bulk, bulk_add
+from .delta import DeltaSegment, compose_topk
+from .epochs import COMPONENTS, ComponentEpochs
+from .live import LiveState, LiveView
+
+__all__ = ["DeltaSegment", "compose_topk", "ComponentEpochs", "COMPONENTS",
+           "LiveState", "LiveView", "bulk_add", "build_hnsw_bulk"]

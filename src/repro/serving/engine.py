@@ -67,6 +67,7 @@ class ServeEngine:
     def __init__(self, backend, opts: SearchOptions | None = None, *,
                  max_batch: int = 256, max_wait_ms: float = 2.0,
                  latency_window: int = 4096,
+                 merge_delta_frac: float | None = None,
                  k: int | None = None, ef: int | None = None,
                  use_pq: bool | None = None):
         if isinstance(backend, FavorIndex):
@@ -113,6 +114,60 @@ class ServeEngine:
         self._hops = 0
         self._path_td = 0
         self._diag_known = True
+        # live-index mutation plumbing: merge_delta_frac schedules a
+        # background compaction between steps once the unmerged delta grows
+        # past that fraction of the base row count (None = manual merge only)
+        if merge_delta_frac is not None and merge_delta_frac <= 0.0:
+            raise ValueError(f"merge_delta_frac must be > 0, "
+                             f"got {merge_delta_frac}")
+        self.merge_delta_frac = merge_delta_frac
+        self._mutations = {"upserts": 0, "deletes": 0, "merges": 0,
+                           "auto_merges": 0}
+
+    # -- live-index mutation API ---------------------------------------------
+    def _mutable(self, op: str):
+        fn = getattr(self.backend, op, None)
+        if fn is None:
+            raise ValueError(
+                f"backend {type(self.backend).__name__} does not support "
+                f"live mutation ({op}); use a LocalBackend/ShardedBackend "
+                f"(optionally cache-wrapped)")
+        return fn
+
+    def upsert(self, vectors, ints=None, floats=None, *, replace=None):
+        """Stream rows into the backend's live delta; returns their ids."""
+        ids = self._mutable("upsert")(vectors, ints, floats, replace=replace)
+        self._mutations["upserts"] += int(len(ids))
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone ids; returns how many were found alive."""
+        n = int(self._mutable("delete")(ids))
+        self._mutations["deletes"] += n
+        return n
+
+    def merge(self, *, wave: int = 512) -> dict:
+        """Fold the delta into the base index now (manual compaction)."""
+        out = self._mutable("merge")(wave=wave)
+        self._mutations["merges"] += 1
+        return out
+
+    def _maybe_merge(self) -> None:
+        """Between-steps merge scheduling: compact once the delta fraction
+        crosses ``merge_delta_frac`` (checked after each served batch, so
+        compaction cost never lands inside a request's latency path)."""
+        if self.merge_delta_frac is None:
+            return
+        live_stats = getattr(self.backend, "live_stats", None)
+        if live_stats is None:
+            return
+        st = live_stats()
+        if st["delta_rows"] and (st["delta_rows"] >=
+                                 self.merge_delta_frac *
+                                 max(st["base_rows"], 1)):
+            self._mutable("merge")()
+            self._mutations["merges"] += 1
+            self._mutations["auto_merges"] += 1
 
     def _route_scorers(self) -> dict:
         """Which scorer serves each route under this engine's options:
@@ -146,6 +201,12 @@ class ServeEngine:
         cache_stats = getattr(self.backend, "cache_stats", None)
         if cache_stats is not None:
             out["cache"] = cache_stats()
+        # engine-level mutation counters + the backend's live-state gauges
+        # (delta/tombstone occupancy) when it supports streaming mutation
+        out["mutations"] = dict(self._mutations)
+        live_stats = getattr(self.backend, "live_stats", None)
+        if live_stats is not None:
+            out["mutations"].update(live_stats())
         return out
 
     def reset_stats(self) -> None:
@@ -158,6 +219,8 @@ class ServeEngine:
         self._hops = 0
         self._path_td = 0
         self._diag_known = True
+        self._mutations = {"upserts": 0, "deletes": 0, "merges": 0,
+                           "auto_merges": 0}
         self.registry.reset_rows()
 
     def warmup(self, buckets=None) -> tuple[int, ...]:
@@ -239,6 +302,7 @@ class ServeEngine:
             self.latencies.append(lat)
             out.append(Response(r.rid, res.ids[i], res.dists[i], route,
                                 float(res.p_hat[i]), lat))
+        self._maybe_merge()
         return out
 
     def run(self, until_empty: bool = True) -> list[Response]:
