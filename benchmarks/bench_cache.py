@@ -74,7 +74,7 @@ def _drive(backend, requests, opts, max_batch: int):
     t0 = time.perf_counter()
     for q, flt in requests:
         eng.submit(q, flt)
-    out = eng.run()
+    out = eng.drain()  # throughput bench: no straggler-deadline waits
     wall = time.perf_counter() - t0
     out.sort(key=lambda r: r.rid)         # rid order == request order
     pct = eng.latency_percentiles()

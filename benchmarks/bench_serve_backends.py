@@ -34,6 +34,7 @@ under ``XLA_FLAGS=--xla_force_host_platform_device_count=S``).
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -46,7 +47,8 @@ from repro.core import filters as F
 from repro.core.distributed import largest_divisor
 from repro.data import synthetic
 from repro.index.bulk import build_hnsw_bulk
-from repro.serving import ServeEngine
+from repro.serving import (FrontEnd, FrontEndSpec, Overloaded, ServeEngine,
+                           TenantSpec)
 
 from .common import DIM, N, NQ, SEED, Csv, update_bench_json
 
@@ -193,6 +195,130 @@ def _churn_point(make_backend, opts, requests, attrs, *, frac: float,
             "deletes": st["deletes"]}
 
 
+def _frontend_coalesce(backend, opts, schema, dim, *, smoke: bool) -> dict:
+    """Poisson arrivals through the async front-end.  With coalesce_ms=0
+    every dispatch carries whatever trickled in during the previous engine
+    step (~1 row at low rates) and pads it up to the smallest bucket; a
+    hold window of a few mean inter-arrivals fills the bucket with real
+    rows first.  Both arms are checked bit-identical against the
+    synchronous ``router.execute`` one-shot path."""
+    n_req = 32 if smoke else 96
+    reqs = _workload(schema, dim, n_req, seed=29)
+    gaps = np.random.default_rng(31).exponential(0.008, n_req)
+    ref = router.execute(backend, np.stack([q for q, _ in reqs]),
+                         [f for _, f in reqs], opts)
+
+    async def drive(coalesce_ms: float):
+        eng = ServeEngine(backend, opts, max_batch=16 if smoke else 32)
+        eng.warmup()
+        fe = FrontEnd(eng, FrontEndSpec(coalesce_ms=coalesce_ms,
+                                        coalesce_target=16))
+        t0 = time.perf_counter()
+        tasks = []
+        for i, (q, flt) in enumerate(reqs):
+            tasks.append(asyncio.create_task(fe.submit(q, flt)))
+            await asyncio.sleep(gaps[i])
+        outs = await asyncio.gather(*tasks)
+        wall = time.perf_counter() - t0
+        st = fe.stats
+        await fe.close()
+        return outs, st, wall
+
+    arms = {}
+    for label, cms in (("uncoalesced", 0.0), ("coalesced", 40.0)):
+        outs, st, wall = asyncio.run(drive(cms))
+        t = st["tenants"]["default"]
+        arms[label] = {
+            "coalesce_ms": cms,
+            "qps": len(outs) / max(wall, 1e-12),
+            "p50_ms": t["p50_ms"], "p99_ms": t["p99_ms"],
+            "dispatches": st["coalesce"]["dispatches"],
+            "mean_batch": st["coalesce"]["mean_batch"],
+            "pad_overhead": st["engine"]["batching"]["pad_overhead"],
+            "mismatch_frac": float(np.mean(
+                [not np.array_equal(r.ids, ref.ids[i])
+                 for i, r in enumerate(outs)])),
+        }
+    return arms
+
+
+def _frontend_qos(backend, opts, schema, dim, *, smoke: bool) -> dict:
+    """One hot tenant fires its whole burst at t=0 while three cold
+    tenants trickle steady traffic.  admission_on = token bucket + bounded
+    queue + weighted fair dequeue; admission_off = unbounded global FIFO,
+    so the burst head-of-line-blocks every cold request behind it."""
+    n_cold, cold_each = 3, (8 if smoke else 16)
+    hot_n = 64 if smoke else 160
+    hot_reqs = _workload(schema, dim, hot_n, seed=37)
+    cold_reqs = _workload(schema, dim, n_cold * cold_each, seed=41)
+
+    def _spec(admission: bool) -> FrontEndSpec:
+        tenants = {"hot": TenantSpec(rate_qps=50.0, burst=8, queue_cap=16)}
+        for c in range(n_cold):
+            tenants[f"cold{c}"] = TenantSpec(weight=2.0)
+        return FrontEndSpec(coalesce_ms=2.0, coalesce_target=16,
+                            admission=admission, fair=admission,
+                            tenants=tenants)
+
+    async def drive(admission: bool):
+        eng = ServeEngine(backend, opts, max_batch=16 if smoke else 32)
+        eng.warmup()
+        fe = FrontEnd(eng, _spec(admission))
+
+        async def one(q, flt, tenant):
+            try:
+                return await fe.submit(q, flt, tenant=tenant)
+            except Overloaded:
+                return None        # sheds are attributed in fe.stats
+
+        async def cold(name, reqs):
+            for q, flt in reqs:
+                await one(q, flt, name)
+                await asyncio.sleep(0.004)
+
+        burst = [asyncio.create_task(one(q, f, "hot")) for q, f in hot_reqs]
+        colds = [asyncio.create_task(
+            cold(f"cold{c}", cold_reqs[c * cold_each:(c + 1) * cold_each]))
+            for c in range(n_cold)]
+        await asyncio.gather(*burst, *colds)
+        st = fe.stats
+        await fe.close()
+        return st
+
+    out = {}
+    for label, admission in (("admission_on", True),
+                             ("admission_off", False)):
+        asyncio.run(drive(admission))   # warm pass: compiles land here,
+        st = asyncio.run(drive(admission))  # not in the measured arm
+        hot = st["tenants"]["hot"]
+        colds = [st["tenants"][f"cold{c}"] for c in range(n_cold)]
+        out[label] = {
+            "hot": {"served": hot["served"], "shed": hot["shed_total"],
+                    "shed_reasons": {k: v for k, v in hot["shed"].items()
+                                     if v},
+                    "p99_ms": hot["p99_ms"]},
+            "cold_served": sum(c["served"] for c in colds),
+            "cold_shed": sum(c["shed_total"] for c in colds),
+            "cold_p99_ms": max(c["p99_ms"] for c in colds),
+        }
+    return out
+
+
+def _assert_frontend_smoke(fr: dict) -> None:
+    """CI acceptance for the async front-end: coalescing is lossless and
+    cuts pad waste; admission sheds the hot tenant only and bounds cold
+    tail latency."""
+    un, co = fr["coalesce"]["uncoalesced"], fr["coalesce"]["coalesced"]
+    assert un["mismatch_frac"] == 0.0 and co["mismatch_frac"] == 0.0, fr
+    assert co["pad_overhead"] < un["pad_overhead"], (un, co)
+    assert co["mean_batch"] >= un["mean_batch"], (un, co)
+    on, off = fr["qos"]["admission_on"], fr["qos"]["admission_off"]
+    assert on["hot"]["shed"] > 0, on
+    assert on["cold_shed"] == 0 and off["cold_shed"] == 0, (on, off)
+    assert off["hot"]["shed"] == 0, off
+    assert on["cold_p99_ms"] <= off["cold_p99_ms"], (on, off)
+
+
 def _assert_smoke(points, shard, requests, spec: BatchSpec, opts):
     """CI acceptance: bounded compiled shapes, exact parity, and the Pallas
     brute scan working inside the sharded shard_map path."""
@@ -321,7 +447,22 @@ def run(quick: bool = False, smoke: bool = False) -> str:
                 assert pt["upserts"] > pt["target_delta_rows"], pt
                 assert pt["deletes"] > 0, pt
 
+    # -- async front-end: coalescing + multi-tenant QoS -----------------------
+    fe_opts = opts_f32.with_(batch=spec)
+    fr = {"coalesce": _frontend_coalesce(local, fe_opts, schema, dim,
+                                         smoke=smoke),
+          "qos": _frontend_qos(local, fe_opts, schema, dim, smoke=smoke)}
+    jpath = update_bench_json("frontend", {
+        "config": {"n": n, "dim": dim, "buckets": list(spec.buckets())},
+        **fr,
+    })
+    if smoke:
+        _assert_frontend_smoke(fr)
+
     sp = points[-1]  # sharded point
+    fr_co = fr["coalesce"]
+    fr_on, fr_off = fr["qos"]["admission_on"], fr["qos"]["admission_off"]
+    hot_total = fr_on["hot"]["shed"] + fr_on["hot"]["served"]
     return (f"shards={n_model} compression={bpv_f32 / bpv_pq:.1f}x "
             + " ".join(summary)
             + f" | batching: shapes {sp['unpadded']['compiled_shapes']}->"
@@ -334,6 +475,12 @@ def run(quick: bool = False, smoke: bool = False) -> str:
                        for pt in churn)
             + f" bulk_recall={rec_bulk:.3f} (seq {rec_seq:.3f}, "
               f"{local.index.build_seconds:.1f}s->{bulk_s:.1f}s)"
+            + " | frontend: pad "
+              f"{fr_co['uncoalesced']['pad_overhead']:.2f}->"
+              f"{fr_co['coalesced']['pad_overhead']:.2f} "
+              f"hot shed {fr_on['hot']['shed']}/{hot_total} "
+              f"cold p99 {fr_on['cold_p99_ms']:.0f}ms"
+              f" (fifo {fr_off['cold_p99_ms']:.0f}ms)"
             + f" json={jpath}")
 
 

@@ -26,6 +26,17 @@ and candidate layers warm: the candidate hit path composes the live state at
 serve time (tombstoned base rows masked out, live delta rows folded in), so
 warm blocks still produce exact results.  Backends without ``versions()``
 fall back to the drop-everything epoch bump.
+
+Tenant scoping: the backend declares ``scope_aware``, so ``router.execute``
+attaches the per-request tenant/session scope ids (when the caller supplies
+them) as a ``"scope"`` sidecar row on the stacked program dict.  The sidecar
+is stripped before every inner (compiled) call -- device backends and their
+warmed jit signatures never see it -- and consumed host-side: the semantic
+and candidate layers key on (scope, signature), so one tenant's cached
+results/ID blocks can never serve another, while the selectivity layer stays
+global (p_hat is a property of the data, not of who asked).  ``scope_id``
+interns tenant names -> dense ids (0 is the unscoped default); per-scope
+hit/miss counters surface through ``cache_stats()``.
 """
 from __future__ import annotations
 
@@ -62,8 +73,25 @@ def _corpus_view(inner):
     return None
 
 
+def _split_scope(programs: dict):
+    """Split the host-side ``"scope"`` sidecar off a stacked program dict.
+
+    Returns ``(inner_programs, scopes)`` where ``inner_programs`` carries
+    only real program rows (safe for compiled inner calls -- attaching an
+    extra pytree leaf would fork the warmed jit signatures) and ``scopes``
+    is a host (B,) int array, or None when the batch is unscoped."""
+    if "scope" not in programs:
+        return programs, None
+    inner = {k: v for k, v in programs.items() if k != "scope"}
+    return inner, np.asarray(programs["scope"], np.int64)
+
+
 class CachingBackend:
     """Wrap ``inner`` with the selectivity/candidate/semantic cache layers."""
+
+    # router.execute attaches per-request tenant scopes only to backends
+    # that declare they consume (and strip) the sidecar
+    scope_aware = True
 
     def __init__(self, inner, spec: CacheSpec | None = None, *,
                  clock=time.monotonic):
@@ -90,6 +118,10 @@ class CachingBackend:
         self._epoch = inner.version()
         self._versions = self._inner_versions()
         self.invalidations = 0
+        # tenant/session scope registry: name -> dense id (0 = unscoped);
+        # the front-end interns its tenants here so scopes stay consistent
+        # across every logical front-end sharing this backend
+        self._scope_ids: dict[str, int] = {"": 0}
         # the live BatchSpec, captured in validate() (which router.execute
         # calls before every batch): the cache split re-introduces
         # data-dependent miss counts, so inner estimate/brute calls are
@@ -113,6 +145,13 @@ class CachingBackend:
 
     def version(self) -> int:
         return self.inner.version()
+
+    def scope_id(self, name) -> int:
+        """Intern a tenant/session name to its dense scope id ("" -> 0)."""
+        s = str(name)
+        if s not in self._scope_ids:
+            self._scope_ids[s] = len(self._scope_ids)
+        return self._scope_ids[s]
 
     def __getattr__(self, name):
         # transparent decorator: anything outside the cache surface
@@ -195,12 +234,14 @@ class CachingBackend:
         self._sync_epoch()
         if not self.semantic_cache.enabled:
             return None
+        programs, scopes = _split_scope(programs)
         queries = np.asarray(queries, np.float32)
         sigs = self._signatures(programs)
         hit = np.zeros((len(sigs),), bool)
         rows = []
         for i, sig in enumerate(sigs):
-            e = self.semantic_cache.get(sig, opts, queries[i])
+            scope = int(scopes[i]) if scopes is not None else 0
+            e = self.semantic_cache.get(sig, opts, queries[i], scope=scope)
             if e is not None:
                 hit[i] = True
                 rows.append(e)
@@ -220,6 +261,7 @@ class CachingBackend:
         """Optional router hook: store freshly computed per-query results."""
         if not self.semantic_cache.enabled:
             return
+        programs, scopes = _split_scope(programs)
         queries = np.asarray(queries, np.float32)
         sigs = self._signatures(programs)
         ids = np.asarray(ids)
@@ -227,12 +269,17 @@ class CachingBackend:
         p_hat = np.asarray(p_hat)
         routed_brute = np.asarray(routed_brute)
         for i, sig in enumerate(sigs):
+            scope = int(scopes[i]) if scopes is not None else 0
             self.semantic_cache.put(sig, opts, queries[i], ids[i], dists[i],
-                                    float(p_hat[i]), bool(routed_brute[i]))
+                                    float(p_hat[i]), bool(routed_brute[i]),
+                                    scope=scope)
 
     # -- selectivity layer ----------------------------------------------------
     def estimate(self, programs: dict, valid=None):
         self._sync_epoch()
+        # the selectivity layer is scope-blind (p_hat is data, not tenant);
+        # the sidecar is stripped so inner compiled calls never see it
+        programs, _ = _split_scope(programs)
         sigs = self._signatures(programs)
         b = len(sigs)
         # pad rows (valid False) never touch the cache: no phantom
@@ -269,6 +316,7 @@ class CachingBackend:
     def search_graph(self, queries, programs: dict, p_hat,
                      opts: SearchOptions, valid=None) -> dict:
         self._sync_epoch()
+        programs, _ = _split_scope(programs)
         return self.inner.search_graph(queries, programs, p_hat, opts,
                                        valid=valid)
 
@@ -347,6 +395,7 @@ class CachingBackend:
     def search_brute(self, queries, programs: dict, opts: SearchOptions,
                      valid=None):
         self._sync_epoch()
+        programs, scopes = _split_scope(programs)
         b = int(queries.shape[0])
         # this layer is host-side: pad rows (valid False) are dropped here
         # and the inner compiled call is re-bucketed in _inner_brute, so
@@ -365,29 +414,35 @@ class CachingBackend:
 
         queries_np = np.asarray(queries, np.float32)
         sigs = self._signatures(programs)
+        scope_of = (lambda i: int(scopes[i])) if scopes is not None \
+            else (lambda i: 0)
         ids = np.full((b, opts.k), -1, np.int64)
         dists = np.full((b, opts.k), np.inf, np.float32)
 
-        hit_rows: dict[str, list[int]] = {}
-        blocks: dict[str, np.ndarray] = {}
+        # candidate bookkeeping is keyed on (scope, signature): blocks
+        # cached by one tenant never serve another, per the isolation
+        # contract (the extension itself is tenant-independent, so the
+        # cost of isolation is duplicate entries, not wrong results)
+        hit_rows: dict[tuple, list[int]] = {}
+        blocks: dict[tuple, np.ndarray] = {}
         miss: list[int] = []
         for i in real:
-            sig = sigs[i]
+            skey = (scope_of(i), sigs[i])
             # one get() per ROW (not per unique signature) so the reported
             # hit/miss counters reflect served lookups, not distinct keys
-            cand = self.candidate_cache.get(sig)
+            cand = self.candidate_cache.get(sigs[i], scope=skey[0])
             if cand is None:
                 miss.append(int(i))
                 continue
-            blocks[sig] = cand
-            hit_rows.setdefault(sig, []).append(int(i))
+            blocks[skey] = cand
+            hit_rows.setdefault(skey, []).append(int(i))
 
         lv = self._live_view() if hit_rows else None
-        for sig, rows in hit_rows.items():
+        for skey, rows in hit_rows.items():
             # compose the live state over the cached base extension: dead
             # base rows drop out, matching live delta rows join at their
             # global ids -- warm blocks stay exact under streaming mutation
-            cand = blocks[sig]
+            cand = blocks[skey]
             extra = None
             if lv is not None:
                 if lv.base_alive is not None:
@@ -406,14 +461,14 @@ class CachingBackend:
             ids[rows] = mid
             dists[rows] = md
             n_rows = self._corpus()[0].shape[0]
-            miss_first: dict[str, int] = {}  # one reference per sig per batch
+            miss_first: dict[tuple, int] = {}  # one reference per key per batch
             for i in miss:
-                miss_first.setdefault(sigs[i], i)
-            for sig, i in miss_first.items():
-                seen = self._brute_seen.get(sig, 0)
+                miss_first.setdefault((scope_of(i), sigs[i]), i)
+            for (scope, sig), i in miss_first.items():
+                seen = self._brute_seen.get((scope, sig), 0)
                 if seen == _REJECTED:
                     continue  # known-ineligible: never recompute extensions
-                self._brute_seen.put(sig, seen + 1)
+                self._brute_seen.put((scope, sig), seen + 1)
                 if seen < 1:
                     continue  # first miss: one-off filters stay free
                 # second miss: admit.  A cached estimate far above the
@@ -421,12 +476,13 @@ class CachingBackend:
                 # (2x slack absorbs sample-estimator error)
                 p_est = self.selectivity_cache.peek(sig)
                 if p_est is not None and p_est > 2.0 * self.candidate_cache.p_max:
-                    self._brute_seen.put(sig, _REJECTED)
+                    self._brute_seen.put((scope, sig), _REJECTED)
                     self.candidate_cache.bypasses += 1
                     continue
                 if not self.candidate_cache.admit(
-                        sig, self._extension(programs, i), n_rows):
-                    self._brute_seen.put(sig, _REJECTED)
+                        sig, self._extension(programs, i), n_rows,
+                        scope=scope):
+                    self._brute_seen.put((scope, sig), _REJECTED)
         return ids, dists
 
     # -- accounting -----------------------------------------------------------
@@ -439,6 +495,7 @@ class CachingBackend:
             "epoch": self._epoch,
             "versions": dict(self._versions) if self._versions else None,
             "invalidations": self.invalidations,
+            "scopes": dict(self._scope_ids),
         }
         for layer in ("selectivity", "candidates", "semantic"):
             st = out[layer]

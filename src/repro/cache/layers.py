@@ -16,6 +16,13 @@ semantics plus a ``bypass`` counter for lookups the layer declined to serve
 by policy (disabled layer, over-cap entry, no corpus access) -- distinct
 from a miss, which is demand the layer could have served with a warmer
 cache.
+
+The candidate and semantic layers additionally take an optional integer
+``scope`` (tenant/session id, 0 = unscoped): the scope joins the cache key,
+so tenant A's entries can never serve tenant B -- the isolation contract the
+multi-tenant front-end relies on -- and per-scope hit/miss counters surface
+in ``stats()["by_scope"]``.  The selectivity layer stays global: p_hat is a
+property of the data, not of who asked.
 """
 from __future__ import annotations
 
@@ -26,6 +33,24 @@ import numpy as np
 
 from ..core.options import CacheSpec
 from .lru import LruTtlCache, _MISS
+
+
+class _ScopeCounters:
+    """Per-scope hit/miss accounting shared by the scoped layers."""
+
+    def __init__(self):
+        self._counts: dict[int, list] = {}
+
+    def count(self, scope: int, hit: bool) -> None:
+        row = self._counts.setdefault(int(scope), [0, 0])
+        row[0 if hit else 1] += 1
+
+    def stats(self) -> dict:
+        out = {}
+        for scope, (h, m) in sorted(self._counts.items()):
+            out[scope] = {"hits": h, "misses": m,
+                          "hit_rate": h / (h + m) if h + m else 0.0}
+        return out
 
 
 class SelectivityCache:
@@ -66,7 +91,10 @@ class CandidateCache:
 
     Blocks store the *base-corpus* extension only; under a live index the
     backend composes tombstones and delta rows over the block at hit time
-    (counted in ``composed``), so entries survive vector-only mutations."""
+    (counted in ``composed``), so entries survive vector-only mutations.
+
+    ``scope`` joins the key: the same signature admitted under two tenants
+    stores two entries (isolation costs sharing, by design)."""
 
     def __init__(self, spec: CacheSpec, clock=time.monotonic):
         self.enabled = spec.candidates
@@ -75,21 +103,25 @@ class CandidateCache:
         self._lru = LruTtlCache(spec.candidate_cap, spec.ttl_s, clock)
         self.bypasses = 0
         self.composed = 0   # hits served through live-state composition
+        self._by_scope = _ScopeCounters()
 
-    def get(self, sig: str) -> np.ndarray | None:
+    def get(self, sig: str, scope: int = 0) -> np.ndarray | None:
         if not self.enabled:
             self.bypasses += 1
             return None
-        return self._lru.get(sig)
+        out = self._lru.get((scope, sig))
+        self._by_scope.count(scope, out is not None)
+        return out
 
-    def admit(self, sig: str, ids: np.ndarray, n_rows: int) -> bool:
+    def admit(self, sig: str, ids: np.ndarray, n_rows: int,
+              scope: int = 0) -> bool:
         """Admission-controlled insert; True when the entry was stored."""
         if not self.enabled:
             return False
         if len(ids) > self.max_ids or len(ids) > self.p_max * n_rows:
             self.bypasses += 1
             return False
-        self._lru.put(sig, np.ascontiguousarray(ids, np.int64))
+        self._lru.put((scope, sig), np.ascontiguousarray(ids, np.int64))
         return True
 
     def clear(self) -> int:
@@ -97,7 +129,8 @@ class CandidateCache:
 
     def stats(self) -> dict:
         return {**self._lru.stats(), "bypasses": self.bypasses,
-                "composed": self.composed, "enabled": self.enabled}
+                "composed": self.composed, "enabled": self.enabled,
+                "by_scope": self._by_scope.stats()}
 
 
 @dataclass
@@ -126,6 +159,7 @@ class SemanticResultCache:
         self._clock = clock
         self._lru = LruTtlCache(spec.semantic_cap, spec.ttl_s, clock)
         self.bypasses = 0
+        self._by_scope = _ScopeCounters()
 
     def _prune(self, entries: list) -> list:
         """Drop entries older than the TTL (counted as expirations)."""
@@ -136,15 +170,18 @@ class SemanticResultCache:
         self._lru.expirations += len(entries) - len(live)
         return live
 
-    def get(self, sig: str, opts, query: np.ndarray) -> _SemanticEntry | None:
-        """Nearest cached entry for (sig, opts) within threshold, else None.
-        Counts one hit or one miss on the underlying LRU either way."""
+    def get(self, sig: str, opts, query: np.ndarray,
+            scope: int = 0) -> _SemanticEntry | None:
+        """Nearest cached entry for (scope, sig, opts) within threshold, else
+        None.  Counts one hit or one miss on the underlying LRU either way."""
         if not self.enabled:
             self.bypasses += 1
             return None
-        entries = self._lru.peek((sig, opts))
+        key = (scope, sig, opts)
+        entries = self._lru.peek(key)
         if entries is _MISS:
             self._lru.misses += 1
+            self._by_scope.count(scope, False)
             return None
         entries[:] = self._prune(entries)
         q = np.asarray(query, np.float32)
@@ -153,17 +190,18 @@ class SemanticResultCache:
             d = float(np.sqrt(np.sum((e.query - q) ** 2, dtype=np.float32)))
             if d <= self.threshold and d < best_d:
                 best, best_d = e, d
+        self._by_scope.count(scope, best is not None)
         if best is None:
             self._lru.misses += 1
             return None
-        self._lru.get((sig, opts))  # touch recency + count the hit
+        self._lru.get(key)  # touch recency + count the hit
         return best
 
     def put(self, sig: str, opts, query: np.ndarray, ids, dists,
-            p_hat: float, routed_brute: bool) -> None:
+            p_hat: float, routed_brute: bool, scope: int = 0) -> None:
         if not self.enabled:
             return
-        key = (sig, opts)
+        key = (scope, sig, opts)
         entries = self._lru.peek(key)
         if entries is _MISS:
             entries = []
@@ -191,4 +229,5 @@ class SemanticResultCache:
 
     def stats(self) -> dict:
         return {**self._lru.stats(), "bypasses": self.bypasses,
-                "enabled": self.enabled, "threshold": self.threshold}
+                "enabled": self.enabled, "threshold": self.threshold,
+                "by_scope": self._by_scope.stats()}

@@ -8,7 +8,8 @@ from .filters import (And, AttributeTable, ColumnSpec, Equality, FalseFilter,
                       paper_filters, paper_schema, program_signature,
                       random_attributes, stack_programs)
 from .hnsw import HnswIndex, HnswParams, build_hnsw
-from .options import BuildSpec, CacheSpec, QuantSpec, SearchOptions
+from .options import (BuildSpec, CacheSpec, FrontEndSpec, QuantSpec,
+                      SearchOptions, TenantSpec)
 from .backend import Backend, LocalBackend, ShardedBackend
 from .router import RoutePlan, SearchResult
 from .scoring import (ExactScorer, PqAdcScorer, Scorer, SqScorer,
@@ -18,11 +19,12 @@ from .search import SearchConfig, favor_graph_search, graph_arrays, rsf_graph_se
 __all__ = [
     "And", "AttributeTable", "Backend", "BatchSpec", "BuildSpec",
     "CacheSpec", "ColumnSpec", "Equality", "ExactScorer", "FalseFilter",
-    "Filter", "FavorIndex", "HnswIndex", "HnswParams", "Inclusion",
+    "Filter", "FavorIndex", "FrontEndSpec", "HnswIndex", "HnswParams",
+    "Inclusion",
     "LocalBackend", "Not", "Or", "PqAdcScorer", "QuantSpec", "Range",
     "RoutePlan", "Schema", "Scorer", "SearchConfig", "SearchOptions",
     "SearchResult", "ShapeRegistry", "ShardedBackend", "SqScorer",
-    "TrueFilter", "batch_signatures", "batching", "build_hnsw",
+    "TenantSpec", "TrueFilter", "batch_signatures", "batching", "build_hnsw",
     "compile_filter", "exclusion", "exclusion_compose",
     "favor_graph_search", "filter_signature", "filters", "graph_arrays",
     "paper_filters", "paper_schema", "prefbf", "program_signature",

@@ -98,19 +98,19 @@ def false_program_rows(programs: dict, pad: int) -> dict:
 
     No disjunct is live (valid == 0) and the interval constraints are
     infeasible (flo=+inf > fhi=-inf), matching compile_filter's dead-row
-    convention, so the rows match no DB row under any evaluator.
+    convention, so the rows match no DB row under any evaluator.  Host-side
+    sidecar keys riding on the dict (the per-row tenant ``scope`` the cache
+    subsystem consumes) are zero-padded: scope 0 is the unscoped default.
     """
-    def z(v, fill=None):
+    fills = {"flo": jnp.inf, "fhi": -jnp.inf}
+    out = {}
+    for k, v in programs.items():
         v = jnp.asarray(v)
         shape = (pad,) + tuple(v.shape[1:])
-        if fill is None:
-            return jnp.zeros(shape, v.dtype)
-        return jnp.full(shape, fill, v.dtype)
-
-    return {"valid": z(programs["valid"]),
-            "imask": z(programs["imask"]),
-            "flo": z(programs["flo"], jnp.inf),
-            "fhi": z(programs["fhi"], -jnp.inf)}
+        fill = fills.get(k)
+        out[k] = (jnp.zeros(shape, v.dtype) if fill is None
+                  else jnp.full(shape, fill, v.dtype))
+    return out
 
 
 def pad_programs(spec: BatchSpec, programs: dict):

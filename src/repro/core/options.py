@@ -140,6 +140,108 @@ class CacheSpec:
 
 
 @dataclass(frozen=True)
+class TenantSpec:
+    """Per-tenant QoS contract for the async serving front-end
+    (``repro.serving.frontend``).
+
+    ``weight`` sets the tenant's share under weighted fair dequeue (2.0 gets
+    twice the dequeue rate of 1.0 under contention).  ``rate_qps``/``burst``
+    parameterize the admission token bucket (None disables rate limiting);
+    ``queue_cap`` bounds the tenant's pending queue (overflow is shed with a
+    structured ``Overloaded``); ``deadline_ms`` is the default per-request
+    deadline (requests still queued past it are shed, never served late).
+    """
+    weight: float = 1.0
+    rate_qps: float | None = None
+    burst: int = 16
+    queue_cap: int = 1024
+    deadline_ms: float | None = None
+
+    def __post_init__(self):
+        if not self.weight > 0.0:
+            raise ValueError(f"TenantSpec.weight must be > 0, "
+                             f"got {self.weight}")
+        if self.rate_qps is not None and not self.rate_qps > 0.0:
+            raise ValueError(f"TenantSpec.rate_qps must be None or > 0, "
+                             f"got {self.rate_qps}")
+        if self.burst < 1:
+            raise ValueError(f"TenantSpec.burst must be >= 1, "
+                             f"got {self.burst}")
+        if self.queue_cap < 1:
+            raise ValueError(f"TenantSpec.queue_cap must be >= 1, "
+                             f"got {self.queue_cap}")
+        if self.deadline_ms is not None and not self.deadline_ms > 0.0:
+            raise ValueError(f"TenantSpec.deadline_ms must be None or > 0, "
+                             f"got {self.deadline_ms}")
+
+    def with_(self, **overrides) -> "TenantSpec":
+        return replace(self, **overrides)
+
+
+@dataclass(frozen=True)
+class FrontEndSpec:
+    """Policy for one logical async front-end over a ServeEngine.
+
+    ``coalesce_ms`` is the cross-step batch-coalescing window: an
+    under-filled batch is held up to this long for more arrivals before it
+    is dispatched, so low arrival rates stop paying bucket-pad overhead
+    (0.0 dispatches immediately -- the uncoalesced baseline).
+    ``coalesce_target`` is the fill level (rows) that releases a held batch
+    early; None targets the dispatch cap.  ``max_batch`` caps one dispatch
+    (None defers to the engine's ``max_batch``).  ``admission=False``
+    disables the token buckets *and* the queue caps (pure unbounded FIFO --
+    the no-QoS baseline); ``fair=False`` replaces weighted fair dequeue
+    with global FIFO order.  ``tenants`` maps tenant name -> TenantSpec
+    (accepted as a dict, stored canonically as a sorted tuple of pairs);
+    unknown tenants fall back to ``default_tenant``.
+    """
+    coalesce_ms: float = 0.0
+    coalesce_target: int | None = None
+    max_batch: int | None = None
+    admission: bool = True
+    fair: bool = True
+    default_tenant: TenantSpec = field(default_factory=TenantSpec)
+    tenants: tuple = ()
+    latency_window: int = 4096
+
+    def __post_init__(self):
+        if self.coalesce_ms < 0.0:
+            raise ValueError(f"FrontEndSpec.coalesce_ms must be >= 0, "
+                             f"got {self.coalesce_ms}")
+        for name in ("coalesce_target", "max_batch"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"FrontEndSpec.{name} must be None or >= 1, "
+                                 f"got {v}")
+        if self.latency_window < 1:
+            raise ValueError(f"FrontEndSpec.latency_window must be >= 1, "
+                             f"got {self.latency_window}")
+        if not isinstance(self.default_tenant, TenantSpec):
+            raise TypeError("FrontEndSpec.default_tenant must be a "
+                            f"TenantSpec, got {self.default_tenant!r}")
+        tenants = self.tenants
+        if isinstance(tenants, dict):
+            tenants = tuple(sorted(tenants.items()))
+            object.__setattr__(self, "tenants", tenants)
+        for pair in tenants:
+            if (not isinstance(pair, tuple) or len(pair) != 2
+                    or not isinstance(pair[0], str)
+                    or not isinstance(pair[1], TenantSpec)):
+                raise TypeError("FrontEndSpec.tenants must map tenant name "
+                                f"-> TenantSpec, got {pair!r}")
+
+    def tenant(self, name: str) -> TenantSpec:
+        """The spec configured for ``name`` (``default_tenant`` otherwise)."""
+        for n, spec in self.tenants:
+            if n == name:
+                return spec
+        return self.default_tenant
+
+    def with_(self, **overrides) -> "FrontEndSpec":
+        return replace(self, **overrides)
+
+
+@dataclass(frozen=True)
 class SearchOptions:
     """Online per-batch options; one instance drives every backend.
 

@@ -111,7 +111,7 @@ def take_programs(programs: dict, idx: np.ndarray) -> dict:
 
 
 def execute(backend, queries, filters, opts: SearchOptions, *,
-            registry=None) -> SearchResult:
+            registry=None, scopes=None) -> SearchResult:
     """Run one filtered-ANNS batch through ``backend`` (paper Fig. 1 online
     phase): result-cache fast path -> estimate -> route -> per-route
     execution -> reassembly.
@@ -133,11 +133,27 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
           served *before* estimation, so a hit skips the whole pipeline.
       record_result(queries, programs, opts, ids, dists, p_hat, routed_brute)
           called with the freshly computed miss rows after execution.
+
+    ``scopes`` is an optional (B,) int array of per-request tenant/session
+    scope ids (0 = unscoped).  It rides the stacked program dict as a
+    ``"scope"`` sidecar row -- so it is sliced, padded (with 0) and
+    sub-batched in lockstep with the filter programs -- but only when the
+    backend declares ``scope_aware`` (the cache subsystem's CachingBackend,
+    which keys its semantic/candidate layers on it and strips it before any
+    inner compiled call); plain device backends never see it, keeping their
+    jit pytree signatures unchanged.
     """
     backend.validate(opts)
     queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
     b = queries.shape[0]
     programs = compile_programs(filters, backend.schema, b)
+    if scopes is not None and getattr(backend, "scope_aware", False):
+        scopes = np.asarray(scopes, np.int32)
+        if scopes.shape != (b,):
+            raise ValueError(f"scopes must be shaped ({b},), "
+                             f"got {scopes.shape}")
+        if scopes.any():   # all-zero means unscoped: skip the sidecar
+            programs["scope"] = jnp.asarray(scopes)
     spec = opts.batch
 
     t0 = time.perf_counter()

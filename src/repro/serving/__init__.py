@@ -1,3 +1,6 @@
+from ..core.options import FrontEndSpec, TenantSpec
 from .engine import Request, Response, ServeEngine
+from .frontend import FrontEnd, Overloaded
 
-__all__ = ["Request", "Response", "ServeEngine"]
+__all__ = ["FrontEnd", "FrontEndSpec", "Overloaded", "Request", "Response",
+           "ServeEngine", "TenantSpec"]

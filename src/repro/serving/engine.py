@@ -31,7 +31,7 @@ from ..core import batching
 from ..core import filters as F
 from ..core import router
 from ..core.backend import LocalBackend
-from ..core.batching import ShapeRegistry
+from ..core.batching import BatchSpec, ShapeRegistry
 from ..core.favor import FavorIndex
 from ..core.options import SearchOptions
 
@@ -41,6 +41,7 @@ class Request:
     rid: int
     query: np.ndarray
     flt: "F.Filter"
+    scope: int = 0
     t_submit: float = field(default_factory=time.perf_counter)
 
 
@@ -54,11 +55,12 @@ class Response:
     latency_s: float
 
 
-def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512)) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return -(-n // buckets[-1]) * buckets[-1]
+def _bucket(n: int, spec: BatchSpec | None = None) -> int:
+    """Bucket size for an n-row batch off the one BatchSpec ladder (the
+    engine's legacy whole-batch pre-pad and the router's sub-batch padding
+    round against the same source of truth; the old hardcoded
+    (8, ..., 512) tuple was exactly BatchSpec's default ladder)."""
+    return (spec or BatchSpec()).bucket_for(n)
 
 
 class ServeEngine:
@@ -95,6 +97,11 @@ class ServeEngine:
         # incompatible (backend, opts) pairs fail here, not mid-serve
         backend.validate(self.opts)
         self.max_batch = max_batch
+        # one bucket ladder everywhere: the router pads sub-batches with
+        # opts.batch; the legacy whole-batch pre-pad (opts.batch None)
+        # rounds against the same BatchSpec ladder (its defaults ARE the
+        # old hardcoded bucket tuple)
+        self.pad_spec = self.opts.batch or BatchSpec()
         self.max_wait_s = max_wait_ms / 1e3
         if latency_window < 1:
             raise ValueError(f"latency_window must be >= 1, "
@@ -245,10 +252,15 @@ class ServeEngine:
     def ef(self) -> int:
         return self.opts.ef
 
-    def submit(self, query: np.ndarray, flt: "F.Filter") -> int:
+    def submit(self, query: np.ndarray, flt: "F.Filter",
+               scope: int = 0) -> int:
+        """Enqueue one request; ``scope`` is the optional tenant/session
+        scope id (0 = unscoped) the cache subsystem keys its semantic and
+        candidate layers on -- the async front-end sets it per tenant."""
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(query, np.float32), flt))
+        self.queue.append(Request(rid, np.asarray(query, np.float32), flt,
+                                  scope=int(scope)))
         return rid
 
     def _assemble(self) -> list[Request]:
@@ -275,19 +287,21 @@ class ServeEngine:
         self._counters["batches"] += 1
         queries = np.stack([r.query for r in batch])
         flts = [r.flt for r in batch]
+        scopes = [r.scope for r in batch]
         if self.opts.batch is None:
             # legacy whole-batch repeat-padding: reuses a compiled program
             # per batch size, but the post-route gi/bi sub-batches still
             # recompile per split.  With opts.batch set the router bucket-
             # pads every sub-batch itself (mask rows, bit-identical results)
             # so no pre-padding is needed here.
-            b = _bucket(len(batch))
+            b = _bucket(len(batch), self.pad_spec)
             if b > len(batch):
                 queries = np.concatenate(
                     [queries, np.repeat(queries[-1:], b - len(batch), 0)])
                 flts = flts + [flts[-1]] * (b - len(batch))
+                scopes = scopes + [scopes[-1]] * (b - len(batch))
         res = router.execute(self.backend, queries, flts, self.opts,
-                             registry=self.registry)
+                             registry=self.registry, scopes=scopes)
         t_done = time.perf_counter()
         if res.hops is None:
             self._diag_known = False
@@ -306,16 +320,35 @@ class ServeEngine:
         return out
 
     def run(self, until_empty: bool = True) -> list[Response]:
-        """until_empty=True drains the whole queue (forcing partial final
-        batches); until_empty=False processes only batches that are already
-        due and leaves the rest waiting for the deadline."""
+        """until_empty=True serves the whole queue *deadline-aware*: full
+        batches flush immediately, but a straggling partial batch waits out
+        the remainder of ``max_wait_ms`` (its coalescing window) before it
+        is forced -- so a near-future arrival can still join it, instead of
+        the pre-1.7 behavior of forcing sub-batches the instant the queue
+        was non-empty.  Shutdown paths that must not wait use ``drain()``.
+        until_empty=False processes only batches that are already due and
+        leaves the rest waiting for the deadline."""
         out = []
         if until_empty:
             while self.queue:
+                if not self._due():
+                    rem = self.max_wait_s - (time.perf_counter()
+                                             - self.queue[0].t_submit)
+                    if rem > 0:
+                        time.sleep(rem)
                 out.extend(self.step(force=True))
         else:
             while self._due():
                 out.extend(self.step())
+        return out
+
+    def drain(self) -> list[Response]:
+        """Force every queued request out NOW, ignoring ``max_wait_ms``
+        (the front-end shutdown path: nothing new is coming, so waiting out
+        straggler deadlines would only add latency)."""
+        out = []
+        while self.queue:
+            out.extend(self.step(force=True))
         return out
 
     def latency_percentiles(self) -> dict:

@@ -173,6 +173,7 @@ def test_serve_engine_deadline(small_index, small_dataset):
     submit(8)
     assert len(eng.step()) == 8
 
-    # run() (until_empty=True) forces out partial batches
+    # drain() forces out partial batches immediately, even with the huge
+    # deadline (run(until_empty=True) would wait the straggler window out)
     submit(3)
-    assert len(eng.run()) == 3 and not eng.queue
+    assert len(eng.drain()) == 3 and not eng.queue
