@@ -23,6 +23,13 @@ tombstone masking) is tracked across PRs, plus a device-parallel bulk-build
 vs numpy-loop build comparison (wall time and recall@10, asserted within
 1pt in smoke mode).  Lands in the ``mutation`` section of BENCH_serve.json.
 
+The **observability scenario** closes the file: the same mixed-selectivity
+stream with the obs layer off vs on at default sampling (best-of-repeats
+QPS, row-identical parity) plus a max-rate probe arm populating the
+estimator-accuracy and route-confusion metrics.  In smoke mode the <5%
+overhead bar is asserted; the numbers land in the ``obs`` section of
+BENCH_serve.json.
+
 The model axis spans every visible device (1 on the CI CPU; S-way sharded
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=S``).
 
@@ -42,7 +49,7 @@ import numpy as np
 
 from repro.configs.favor_anns import FavorServeConfig
 from repro.core import (BatchSpec, FavorIndex, HnswParams, LocalBackend,
-                        ShardedBackend, router)
+                        ObsSpec, ShardedBackend, router)
 from repro.core import filters as F
 from repro.core.distributed import largest_divisor
 from repro.data import synthetic
@@ -319,6 +326,81 @@ def _assert_frontend_smoke(fr: dict) -> None:
     assert on["cold_p99_ms"] <= off["cold_p99_ms"], (on, off)
 
 
+def _obs_overhead(backend, opts, requests, *, repeats: int) -> dict:
+    """Observability cost + probe accuracy on the mixed-selectivity stream.
+
+    Three arms over the same warmed engine shape: obs OFF
+    (``ObsSpec(enabled=False)``), obs ON at default sampling (every batch
+    traced -- the worst steady-state case), and a diagnostics arm with the
+    estimator-accuracy probe on every batch plus sampled route shadows.
+    Overhead is best-of-``repeats`` QPS off vs on (best-of bounds scheduler
+    noise, which at these walltimes dwarfs the obs cost itself); the off/on
+    arms are also checked row-identical, the observe-never-steer contract.
+    """
+    def drive(obs_spec, n_rep):
+        best, outs, eng = 0.0, None, None
+        for _ in range(n_rep):
+            eng = ServeEngine(backend, opts, max_batch=32, obs=obs_spec)
+            for q, flt in requests:
+                eng.submit(q, flt)
+            eng.drain()                 # warm-up pass
+            eng.reset_stats()
+            for q, flt in requests:
+                eng.submit(q, flt)
+            t0 = time.perf_counter()
+            out = eng.drain()
+            wall = time.perf_counter() - t0
+            best = max(best, len(out) / max(wall, 1e-12))
+            outs = out
+        return best, outs, eng
+
+    qps_off, out_off, _ = drive(ObsSpec(enabled=False), repeats)
+    qps_on, out_on, eng_on = drive(ObsSpec(), repeats)
+    mismatch = float(np.mean([not np.array_equal(a.ids, b.ids)
+                              for a, b in zip(out_off, out_on)]))
+    # diagnostics arm: accuracy, not speed -- one pass, max probe rate
+    _, _, eng_p = drive(ObsSpec(probe_sample=1.0, shadow_sample=0.5,
+                                slow_ms=0.0), 1)
+    snap = eng_p.obs.snapshot()
+    err = snap["histograms"]["favor_estimator_abs_error"]["series"].get(
+        "", {"sum": 0.0, "count": 0})
+    probes = snap["counters"]["favor_estimator_probes_total"]["series"]
+    flips = snap["counters"]["favor_estimator_route_flips_total"]["series"]
+    shadow = snap["counters"]["favor_route_shadow_total"]["series"]
+    regret = snap["counters"]["favor_route_regret_seconds_total"][
+        "series"].get("", 0.0)
+    return {
+        "qps_off": qps_off, "qps_on": qps_on,
+        "overhead_frac": (qps_off - qps_on) / max(qps_off, 1e-12),
+        "mismatch_frac": mismatch,
+        "traces": eng_on.stats["obs"]["traces"],
+        "slow_queries": eng_on.stats["obs"]["slow_queries"],
+        "probes": {
+            "count": int(sum(probes.values())),
+            "mean_abs_error": err["sum"] / max(err["count"], 1),
+            "route_flips": int(sum(flips.values())),
+            "by_route": {k: int(v) for k, v in probes.items()},
+        },
+        "shadow": {
+            "count": int(sum(shadow.values())),
+            "confusion": {k: int(v) for k, v in shadow.items()},
+            "regret_s": float(regret),
+        },
+    }
+
+
+def _assert_obs_smoke(ob: dict) -> None:
+    """CI acceptance for the observability layer: bit-identical results,
+    <5% QPS overhead at default sampling, and populated estimator-error +
+    route-confusion metrics on the mixed-selectivity stream."""
+    assert ob["mismatch_frac"] == 0.0, ob
+    assert ob["overhead_frac"] < 0.05, ob
+    assert ob["traces"] > 0, ob
+    p, s = ob["probes"], ob["shadow"]
+    assert p["count"] > 0 and 0.0 <= p["mean_abs_error"] <= 1.0, p
+    assert s["count"] > 0 and s["confusion"], s
+
+
 def _assert_smoke(points, shard, requests, spec: BatchSpec, opts):
     """CI acceptance: bounded compiled shapes, exact parity, and the Pallas
     brute scan working inside the sharded shard_map path."""
@@ -459,6 +541,17 @@ def run(quick: bool = False, smoke: bool = False) -> str:
     if smoke:
         _assert_frontend_smoke(fr)
 
+    # -- observability: overhead + estimator/route-confusion probes -----------
+    ob = _obs_overhead(local, opts_f32, requests,
+                       repeats=3 if quick else 5)
+    jpath = update_bench_json("obs", {
+        "config": {"n": n, "dim": dim, "requests": n_requests,
+                   "max_batch": 32},
+        **ob,
+    })
+    if smoke:
+        _assert_obs_smoke(ob)
+
     sp = points[-1]  # sharded point
     fr_co = fr["coalesce"]
     fr_on, fr_off = fr["qos"]["admission_on"], fr["qos"]["admission_off"]
@@ -481,6 +574,10 @@ def run(quick: bool = False, smoke: bool = False) -> str:
               f"hot shed {fr_on['hot']['shed']}/{hot_total} "
               f"cold p99 {fr_on['cold_p99_ms']:.0f}ms"
               f" (fifo {fr_off['cold_p99_ms']:.0f}ms)"
+            + f" | obs: overhead {ob['overhead_frac']:+.1%} "
+              f"err {ob['probes']['mean_abs_error']:.3f} "
+              f"flips {ob['probes']['route_flips']}/{ob['probes']['count']} "
+              f"regret {ob['shadow']['regret_s'] * 1e3:.1f}ms"
             + f" json={jpath}")
 
 
@@ -492,7 +589,8 @@ def main() -> None:
                     help="full-size corpus (default: quick)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: tiny corpus, assert the compile-regression"
-                         " guard, padded parity and sharded use_pallas")
+                         " guard, padded parity, sharded use_pallas and the"
+                         " <5%% obs overhead bar")
     args = ap.parse_args()
     print(run(quick=not args.full, smoke=args.smoke))
 

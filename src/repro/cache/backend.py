@@ -212,6 +212,17 @@ class CachingBackend:
         self._brute_seen.clear()
         self._sig_memo = []
 
+    def reset_cache_counters(self) -> None:
+        """Zero every layer's hit/miss/bypass/eviction counters and the
+        invalidation count; entries, epochs and scope interning survive.
+        ``ServeEngine.reset_stats()`` calls this through the metrics
+        registry's reset cascade (the dual of ``clear()``, which drops
+        entries but keeps counters)."""
+        self.selectivity_cache.reset_counters()
+        self.candidate_cache.reset_counters()
+        self.semantic_cache.reset_counters()
+        self.invalidations = 0
+
     def _signatures(self, programs: dict) -> list[str]:
         """Per-query canonical signatures, memoized on array identity."""
         vals = tuple(programs[k] for k in ("valid", "imask", "flo", "fhi"))

@@ -52,6 +52,9 @@ class _ScopeCounters:
                           "hit_rate": h / (h + m) if h + m else 0.0}
         return out
 
+    def reset(self) -> None:
+        self._counts.clear()
+
 
 class SelectivityCache:
     """signature -> p_hat; skips backend.estimate for repeat filters."""
@@ -80,6 +83,10 @@ class SelectivityCache:
 
     def clear(self) -> int:
         return self._lru.clear()
+
+    def reset_counters(self) -> None:
+        self._lru.reset_counters()
+        self.bypasses = 0
 
     def stats(self) -> dict:
         return {**self._lru.stats(), "bypasses": self.bypasses,
@@ -126,6 +133,12 @@ class CandidateCache:
 
     def clear(self) -> int:
         return self._lru.clear()
+
+    def reset_counters(self) -> None:
+        self._lru.reset_counters()
+        self.bypasses = 0
+        self.composed = 0
+        self._by_scope.reset()
 
     def stats(self) -> dict:
         return {**self._lru.stats(), "bypasses": self.bypasses,
@@ -226,6 +239,11 @@ class SemanticResultCache:
 
     def clear(self) -> int:
         return self._lru.clear()
+
+    def reset_counters(self) -> None:
+        self._lru.reset_counters()
+        self.bypasses = 0
+        self._by_scope.reset()
 
     def stats(self) -> dict:
         return {**self._lru.stats(), "bypasses": self.bypasses,

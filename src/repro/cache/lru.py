@@ -87,3 +87,11 @@ class LruTtlCache:
         return {"size": len(self._d), "cap": self.cap, "hits": self.hits,
                 "misses": self.misses, "evictions": self.evictions,
                 "expirations": self.expirations}
+
+    def reset_counters(self) -> None:
+        """Zero the hit/miss/eviction/expiration counters; entries survive
+        (the registry reset cascade zeroes accounting, not state)."""
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.expirations = 0

@@ -8,7 +8,7 @@ from .filters import (And, AttributeTable, ColumnSpec, Equality, FalseFilter,
                       paper_filters, paper_schema, program_signature,
                       random_attributes, stack_programs)
 from .hnsw import HnswIndex, HnswParams, build_hnsw
-from .options import (BuildSpec, CacheSpec, FrontEndSpec, QuantSpec,
+from .options import (BuildSpec, CacheSpec, FrontEndSpec, ObsSpec, QuantSpec,
                       SearchOptions, TenantSpec)
 from .backend import Backend, LocalBackend, ShardedBackend
 from .router import RoutePlan, SearchResult
@@ -21,7 +21,8 @@ __all__ = [
     "CacheSpec", "ColumnSpec", "Equality", "ExactScorer", "FalseFilter",
     "Filter", "FavorIndex", "FrontEndSpec", "HnswIndex", "HnswParams",
     "Inclusion",
-    "LocalBackend", "Not", "Or", "PqAdcScorer", "QuantSpec", "Range",
+    "LocalBackend", "Not", "ObsSpec", "Or", "PqAdcScorer", "QuantSpec",
+    "Range",
     "RoutePlan", "Schema", "Scorer", "SearchConfig", "SearchOptions",
     "SearchResult", "ShapeRegistry", "ShardedBackend", "SqScorer",
     "TenantSpec", "TrueFilter", "batch_signatures", "batching", "build_hnsw",

@@ -16,6 +16,7 @@ once, here, from the backend's own selectivity estimate.
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass
 
 import jax.numpy as jnp
@@ -111,7 +112,7 @@ def take_programs(programs: dict, idx: np.ndarray) -> dict:
 
 
 def execute(backend, queries, filters, opts: SearchOptions, *,
-            registry=None, scopes=None) -> SearchResult:
+            registry=None, scopes=None, obs=None) -> SearchResult:
     """Run one filtered-ANNS batch through ``backend`` (paper Fig. 1 online
     phase): result-cache fast path -> estimate -> route -> per-route
     execution -> reassembly.
@@ -142,11 +143,29 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
     which keys its semantic/candidate layers on it and strips it before any
     inner compiled call); plain device backends never see it, keeping their
     jit pytree signatures unchanged.
+
+    ``obs`` is an optional ``repro.obs.Obs``: when its tracer samples this
+    batch, every pipeline stage below runs inside a span (wall time, route,
+    bucket shape, pad fraction, cache hits), and -- when the spec enables
+    kernel annotations -- the route dispatches run inside host-side
+    ``jax.profiler.TraceAnnotation`` scopes named by route and bucket.
+    Obs hooks only *observe*; results are bit-identical with obs absent,
+    disabled, or sampled out.
     """
     backend.validate(opts)
     queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
     b = queries.shape[0]
-    programs = compile_programs(filters, backend.schema, b)
+
+    tr = obs.start_trace(b) if obs is not None else None
+    if tr is None:
+        def _span(name, **attrs):
+            return nullcontext()
+    else:
+        _span = tr.span
+    _ann = obs.annotate if obs is not None else (lambda name: nullcontext())
+
+    with _span("compile", rows=b):
+        programs = compile_programs(filters, backend.schema, b)
     if scopes is not None and getattr(backend, "scope_aware", False):
         scopes = np.asarray(scopes, np.int32)
         if scopes.shape != (b,):
@@ -166,7 +185,12 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
     graph_diag = True  # False once a graph backend omits hops/path_td
 
     lookup = getattr(backend, "lookup_result", None)
-    cached = lookup(np.asarray(queries), programs, opts) if lookup else None
+    with _span("cache_lookup") as sp:
+        cached = (lookup(np.asarray(queries), programs, opts)
+                  if lookup else None)
+        if sp is not None:
+            sp.attrs["hits"] = (int(np.asarray(cached["hit"]).sum())
+                                if cached is not None else 0)
     if cached is not None:
         hi = np.nonzero(np.asarray(cached["hit"], bool))[0]
         ids[hi] = np.asarray(cached["ids"])
@@ -183,59 +207,88 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
         full = len(miss) == b
         mq = queries if full else queries[miss]
         mprogs = programs if full else take_programs(programs, miss)
-        if spec is None:
-            batching.record(registry, "estimate", len(miss), len(miss))
-            mp_hat = np.asarray(backend.estimate(mprogs))
-        else:
-            eprogs, evalid = batching.pad_programs(spec, mprogs)
-            batching.record(registry, "estimate", len(evalid), len(miss))
-            mp_hat = np.asarray(backend.estimate(
-                eprogs, valid=evalid))[:len(miss)]
-        plan = plan_routes(mp_hat, backend.sel_cfg.lam, opts.force)
+        with _span("estimate", rows=len(miss)) as sp:
+            if spec is None:
+                batching.record(registry, "estimate", len(miss), len(miss))
+                mp_hat = np.asarray(backend.estimate(mprogs))
+            else:
+                eprogs, evalid = batching.pad_programs(spec, mprogs)
+                batching.record(registry, "estimate", len(evalid), len(miss))
+                if sp is not None:
+                    sp.attrs["bucket"] = int(len(evalid))
+                with _ann(f"favor/estimate/b{len(evalid)}"):
+                    mp_hat = np.asarray(backend.estimate(
+                        eprogs, valid=evalid))[:len(miss)]
+        with _span("route") as sp:
+            plan = plan_routes(mp_hat, backend.sel_cfg.lam, opts.force)
+            if sp is not None:
+                sp.attrs["graph"] = int(len(plan.graph_idx))
+                sp.attrs["brute"] = int(len(plan.brute_idx))
         p_hat[miss] = plan.p_hat
         routed_brute[miss] = plan.brute
 
         gi, bi = plan.graph_idx, plan.brute_idx
         if len(gi):
-            whole = len(gi) == len(miss)
-            gq = mq if whole else mq[gi]
-            gprogs = mprogs if whole else take_programs(mprogs, gi)
-            gp = mp_hat if whole else mp_hat[gi]
-            gvalid = None
-            if spec is not None:
-                gq, gprogs, gp, gvalid = batching.pad_to_bucket(
-                    spec, gq, gprogs, gp)
-            batching.record(registry, "graph", int(gq.shape[0]), len(gi),
-                            opts)
-            out = backend.search_graph(gq, gprogs, jnp.asarray(gp), opts,
-                                       valid=gvalid)
-            ids[miss[gi]] = np.asarray(out["ids"])[:len(gi)]
-            dists[miss[gi]] = np.asarray(out["dists"])[:len(gi)]
-            if "hops" in out:
-                hops[miss[gi]] = np.asarray(out["hops"])[:len(gi)]
-                path_td[miss[gi]] = np.asarray(out["path_td"])[:len(gi)]
-            else:
-                graph_diag = False
+            with _span("graph", rows=len(gi)) as gspan:
+                whole = len(gi) == len(miss)
+                gq = mq if whole else mq[gi]
+                gprogs = mprogs if whole else take_programs(mprogs, gi)
+                gp = mp_hat if whole else mp_hat[gi]
+                gvalid = None
+                if spec is not None:
+                    with _span("pad"):
+                        gq, gprogs, gp, gvalid = batching.pad_to_bucket(
+                            spec, gq, gprogs, gp)
+                bucket = int(gq.shape[0])
+                if gspan is not None:
+                    gspan.attrs["bucket"] = bucket
+                    gspan.attrs["pad_frac"] = 1.0 - len(gi) / bucket
+                batching.record(registry, "graph", bucket, len(gi), opts)
+                with _span("search"), _ann(f"favor/graph/b{bucket}"):
+                    out = backend.search_graph(gq, gprogs, jnp.asarray(gp),
+                                               opts, valid=gvalid)
+                ids[miss[gi]] = np.asarray(out["ids"])[:len(gi)]
+                dists[miss[gi]] = np.asarray(out["dists"])[:len(gi)]
+                if "hops" in out:
+                    hops[miss[gi]] = np.asarray(out["hops"])[:len(gi)]
+                    path_td[miss[gi]] = np.asarray(out["path_td"])[:len(gi)]
+                else:
+                    graph_diag = False
         if len(bi):
-            whole = len(bi) == len(miss)
-            bq = mq if whole else mq[bi]
-            bprogs = mprogs if whole else take_programs(mprogs, bi)
-            bvalid = None
-            if spec is not None:
-                bq, bprogs, _, bvalid = batching.pad_to_bucket(spec, bq,
-                                                               bprogs)
-            batching.record(registry, "brute", int(bq.shape[0]), len(bi),
-                            opts)
-            bid, bd = backend.search_brute(bq, bprogs, opts, valid=bvalid)
-            ids[miss[bi]] = np.asarray(bid)[:len(bi)]
-            dists[miss[bi]] = np.asarray(bd)[:len(bi)]
+            with _span("brute", rows=len(bi)) as bspan:
+                whole = len(bi) == len(miss)
+                bq = mq if whole else mq[bi]
+                bprogs = mprogs if whole else take_programs(mprogs, bi)
+                bvalid = None
+                if spec is not None:
+                    with _span("pad"):
+                        bq, bprogs, _, bvalid = batching.pad_to_bucket(
+                            spec, bq, bprogs)
+                bucket = int(bq.shape[0])
+                if bspan is not None:
+                    bspan.attrs["bucket"] = bucket
+                    bspan.attrs["pad_frac"] = 1.0 - len(bi) / bucket
+                batching.record(registry, "brute", bucket, len(bi), opts)
+                with _span("search"), _ann(f"favor/brute/b{bucket}"):
+                    bid, bd = backend.search_brute(bq, bprogs, opts,
+                                                   valid=bvalid)
+                ids[miss[bi]] = np.asarray(bid)[:len(bi)]
+                dists[miss[bi]] = np.asarray(bd)[:len(bi)]
 
         record = getattr(backend, "record_result", None)
         if record is not None:
-            record(np.asarray(mq), mprogs, opts, ids[miss], dists[miss],
-                   mp_hat, plan.brute)
+            with _span("cache_record"):
+                record(np.asarray(mq), mprogs, opts, ids[miss], dists[miss],
+                       mp_hat, plan.brute)
     # the np.asarray conversions above already synced the device work
     elapsed = time.perf_counter() - t0
+    if tr is not None:
+        tr.attrs["cache_hits"] = int(b - len(miss))
+        tr.attrs["graph"] = int(b - int(routed_brute.sum()))
+        tr.attrs["brute"] = int(routed_brute.sum())
+        obs.finish_trace(
+            tr, p_hat=p_hat, routed_brute=routed_brute, ef=opts.ef,
+            signatures=lambda: F.batch_signatures(programs))
     return SearchResult(ids, dists, p_hat, routed_brute,
                         hops if graph_diag else None,
                         path_td if graph_diag else None, elapsed)

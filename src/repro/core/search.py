@@ -355,12 +355,17 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
         new = ok & ~seen
         visited = _visit_bits(s["visited"], rows, safe, new)
 
-        d = scorer.score_block(g, sstate, safe)
-        td = F.eval_program_gathered(
-            programs, g["attrs_int"][safe], g["attrs_float"][safe], xp=jnp)
-        if alive is not None:
-            td = td & alive[safe]
-        key = exclusion_compose(d, td, D[:, None])   # Eq. 2
+        # profiling scope: stamps the per-wave gather+score+filter ops into
+        # HLO metadata so device traces attribute traversal time to waves
+        # (trace-time only; see repro.obs.profiling)
+        with jax.named_scope("favor.graph_wave"):
+            d = scorer.score_block(g, sstate, safe)
+            td = F.eval_program_gathered(
+                programs, g["attrs_int"][safe], g["attrs_float"][safe],
+                xp=jnp)
+            if alive is not None:
+                td = td & alive[safe]
+            key = exclusion_compose(d, td, D[:, None])   # Eq. 2
 
         # -- pool insertion (lines 15-24) -------------------------------------
         worst_now = jnp.max(res_d, axis=1)           # +inf when R not full
@@ -395,7 +400,8 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
         "visited": visited, "active": active,
         "step": jnp.asarray(0, jnp.int32), "hops": hops, "path_td": path_td,
     }
-    state = jax.lax.while_loop(cond, body, state)
+    with jax.named_scope("favor.graph_traverse"):
+        state = jax.lax.while_loop(cond, body, state)
 
     # --- final S: k nearest TD in R (Algorithm 2 line 9) --------------------
     sd = jnp.where(state["res_t"], state["res_d"], INF)  # TD dbar == scorer dist

@@ -60,9 +60,12 @@ def filtered_topk(vectors, norms, ints, floats, queries, programs, *,
         dvec = jnp.zeros((b,), jnp.float32)
     dvec_p = _pad_rows(dvec.astype(jnp.float32), b_pad, 0)
 
-    out_d, out_i = filtered_topk_pallas(
-        queries_p, vectors, norms, ints, floats, programs_p, dvec_p,
-        k=k, block_q=bq, block_n=bn, exclude=exclude, interpret=interpret)
+    # HLO-metadata profiling scope (see repro.obs.profiling): trace-time
+    # only, zero runtime cost
+    with jax.named_scope("favor.filtered_topk"):
+        out_d, out_i = filtered_topk_pallas(
+            queries_p, vectors, norms, ints, floats, programs_p, dvec_p,
+            k=k, block_q=bq, block_n=bn, exclude=exclude, interpret=interpret)
     out_d, out_i = out_d[:b], out_i[:b]
     missing = out_d >= BIG
     if valid is not None:

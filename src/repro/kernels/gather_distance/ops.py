@@ -20,9 +20,12 @@ def gather_distance(vectors, norms, ints, floats, queries, nbr_ids, programs,
     Returns (dbar (B, M) f32 -- +inf at -1 padding, td (B, M) bool)."""
     if interpret is None:
         interpret = default_interpret()
-    out_d, out_td = gather_distance_pallas(
-        nbr_ids.astype(jnp.int32), queries, vectors, norms, ints, floats,
-        programs, dvec.astype(jnp.float32), interpret=interpret)
+    # HLO-metadata profiling scope (see repro.obs.profiling): trace-time
+    # only, zero runtime cost
+    with jax.named_scope("favor.gather_distance"):
+        out_d, out_td = gather_distance_pallas(
+            nbr_ids.astype(jnp.int32), queries, vectors, norms, ints, floats,
+            programs, dvec.astype(jnp.float32), interpret=interpret)
     out_d = jnp.where(out_d >= BIG, jnp.inf, out_d)
     out_td = out_td.astype(bool)
     if valid is not None:

@@ -23,12 +23,17 @@ def pq_adc_gather(codes, luts, nbr_ids, *, interpret: bool | None = None):
     b, m, ksub = luts.shape
     if interpret is None:
         interpret = default_interpret()
-    # codes pass through in their stored uint8 layout: widening here would
-    # materialize a 4x corpus copy and quadruple every gathered row's DMA
-    out = pq_adc_gather_pallas(
-        nbr_ids.astype(jnp.int32), luts.reshape(b, m * ksub),
-        codes, interpret=interpret)
-    return jnp.where(out >= BIG, jnp.inf, out)
+    # named_scope stamps the kernel into HLO op metadata at trace time, so
+    # a jax.profiler capture attributes its device time by name -- compiled
+    # executables carry it for free (repro.obs.profiling)
+    with jax.named_scope("favor.pq_adc_gather"):
+        # codes pass through in their stored uint8 layout: widening here
+        # would materialize a 4x corpus copy and quadruple every gathered
+        # row's DMA
+        out = pq_adc_gather_pallas(
+            nbr_ids.astype(jnp.int32), luts.reshape(b, m * ksub),
+            codes, interpret=interpret)
+        return jnp.where(out >= BIG, jnp.inf, out)
 
 
 @partial(jax.jit, static_argnames=("r", "block_q", "block_n", "interpret"))
@@ -69,9 +74,10 @@ def pq_adc_topr(codes, norms, ints, floats, luts, programs, *,
 
     if interpret is None:
         interpret = default_interpret()
-    out_d, out_i = pq_adc_pallas(
-        luts_p, codes, norms, ints, floats, programs_p,
-        r=r, block_q=bq, block_n=bn, interpret=interpret)
+    with jax.named_scope("favor.pq_adc_topr"):
+        out_d, out_i = pq_adc_pallas(
+            luts_p, codes, norms, ints, floats, programs_p,
+            r=r, block_q=bq, block_n=bn, interpret=interpret)
     out_d, out_i = out_d[:b], out_i[:b]
     missing = out_d >= BIG
     if valid is not None:

@@ -33,7 +33,12 @@ from ..core import router
 from ..core.backend import LocalBackend
 from ..core.batching import BatchSpec, ShapeRegistry
 from ..core.favor import FavorIndex
-from ..core.options import SearchOptions
+from ..core.options import ObsSpec, SearchOptions
+from ..obs import Obs
+
+# p_hat lives in [0,1]; bounds straddle the default route lambda (0.01) so
+# the selectivity-band request distribution is readable off one histogram
+P_HAT_BUCKETS = (0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0)
 
 
 @dataclass
@@ -70,6 +75,8 @@ class ServeEngine:
                  max_batch: int = 256, max_wait_ms: float = 2.0,
                  latency_window: int = 4096,
                  merge_delta_frac: float | None = None,
+                 obs: "Obs | ObsSpec | None" = None,
+                 time_fn=time.perf_counter,
                  k: int | None = None, ef: int | None = None,
                  use_pq: bool | None = None):
         if isinstance(backend, FavorIndex):
@@ -107,7 +114,9 @@ class ServeEngine:
             raise ValueError(f"latency_window must be >= 1, "
                              f"got {latency_window}")
         self.queue: list[Request] = []
-        self._counters = {"graph": 0, "brute": 0, "batches": 0}
+        # injectable monotonic clock: latency/deadline behavior becomes
+        # deterministic under a fake clock (obs + tests share it)
+        self._time = time_fn
         # bounded rolling window: long-running engines must not grow memory
         # with request count (percentiles are over the last N requests)
         self.latencies: deque[float] = deque(maxlen=latency_window)
@@ -115,11 +124,9 @@ class ServeEngine:
         # compiled-shape + pad-overhead ledger (core.batching); fed by every
         # router.execute call and by warmup()
         self.registry = ShapeRegistry()
-        # graph-traversal diagnostics: totals across served requests, or
-        # None-safe "unknown" once a backend that doesn't report them (the
-        # sharded serve path) handled a graph sub-batch
-        self._hops = 0
-        self._path_td = 0
+        # graph-traversal diagnostics are None-safe "unknown" once a backend
+        # that doesn't report them (the sharded serve path) handled a graph
+        # sub-batch
         self._diag_known = True
         # live-index mutation plumbing: merge_delta_frac schedules a
         # background compaction between steps once the unmerged delta grows
@@ -128,8 +135,53 @@ class ServeEngine:
             raise ValueError(f"merge_delta_frac must be > 0, "
                              f"got {merge_delta_frac}")
         self.merge_delta_frac = merge_delta_frac
-        self._mutations = {"upserts": 0, "deletes": 0, "merges": 0,
-                           "auto_merges": 0}
+        # one metrics registry serves every stats surface (repro.obs): the
+        # engine records typed instruments, and nested legacy dicts (shape
+        # ledger, cache layers, scorers, live gauges) join as views, so
+        # snapshot()/prometheus_text() export the whole stack
+        if obs is None or isinstance(obs, ObsSpec):
+            obs = Obs(obs, time_fn=time_fn)
+        elif not isinstance(obs, Obs):
+            raise TypeError("obs must be an Obs, ObsSpec or None, got "
+                            f"{type(obs).__name__}")
+        self.obs = obs
+        reg = obs.registry
+        self._m_requests = reg.counter(
+            "favor_requests_total", "Requests served, by route",
+            labels=("route",))
+        self._m_batches = reg.counter(
+            "favor_batches_total", "Engine batches dispatched")
+        self._m_latency = reg.histogram(
+            "favor_request_latency_seconds",
+            "End-to-end request latency (submit to response)",
+            buckets=obs.spec.latency_buckets)
+        self._m_p_hat = reg.histogram(
+            "favor_p_hat", "Estimated selectivity of served requests",
+            buckets=P_HAT_BUCKETS)
+        self._m_hops = reg.counter(
+            "favor_graph_hops_total",
+            "Graph-traversal hops across served requests")
+        self._m_path_td = reg.counter(
+            "favor_graph_path_td_total",
+            "Exclusion-distance path totals across served requests")
+        self._m_mutations = reg.counter(
+            "favor_mutations_total", "Live-index mutations, by operation",
+            labels=("op",))
+        reg.register_view("batching", self.registry.stats)
+        reg.register_view("scorers", self._route_scorers)
+        reg.register_view("mutations", self._mutation_view)
+        cache_stats = getattr(backend, "cache_stats", None)
+        if cache_stats is not None:
+            reg.register_view("cache", cache_stats)
+        live_stats = getattr(backend, "live_stats", None)
+        if live_stats is not None:
+            reg.register_view("live", live_stats)
+        # resets cascade: obs.reset() zeroes the instruments above, then
+        # these hooks clear every legacy counter the registry can't own
+        reg.on_reset(self._on_registry_reset)
+        cache_reset = getattr(backend, "reset_cache_counters", None)
+        if callable(cache_reset):
+            reg.on_reset(cache_reset)
 
     # -- live-index mutation API ---------------------------------------------
     def _mutable(self, op: str):
@@ -144,19 +196,19 @@ class ServeEngine:
     def upsert(self, vectors, ints=None, floats=None, *, replace=None):
         """Stream rows into the backend's live delta; returns their ids."""
         ids = self._mutable("upsert")(vectors, ints, floats, replace=replace)
-        self._mutations["upserts"] += int(len(ids))
+        self._m_mutations.inc(int(len(ids)), op="upserts")
         return ids
 
     def delete(self, ids) -> int:
         """Tombstone ids; returns how many were found alive."""
         n = int(self._mutable("delete")(ids))
-        self._mutations["deletes"] += n
+        self._m_mutations.inc(n, op="deletes")
         return n
 
     def merge(self, *, wave: int = 512) -> dict:
         """Fold the delta into the base index now (manual compaction)."""
         out = self._mutable("merge")(wave=wave)
-        self._mutations["merges"] += 1
+        self._m_mutations.inc(op="merges")
         return out
 
     def _maybe_merge(self) -> None:
@@ -173,8 +225,8 @@ class ServeEngine:
                                  self.merge_delta_frac *
                                  max(st["base_rows"], 1)):
             self._mutable("merge")()
-            self._mutations["merges"] += 1
-            self._mutations["auto_merges"] += 1
+            self._m_mutations.inc(op="merges")
+            self._m_mutations.inc(op="auto_merges")
 
     def _route_scorers(self) -> dict:
         """Which scorer serves each route under this engine's options:
@@ -191,44 +243,59 @@ class ServeEngine:
                 "brute": (kind or "exact") if self.opts.use_pq else "exact",
                 "use_pallas": self.opts.use_pallas}
 
-    @property
-    def stats(self) -> dict:
-        """Routing counters; ``scorers`` -- which scorer (exact/pq/sq)
-        serves each route under the engine's options; ``hops``/``path_td``
-        graph-traversal totals (``None`` -- not silently 0 -- when the
-        backend does not report them, e.g. the sharded top-k merge);
-        ``batching`` compiled-shape and pad-overhead counters; plus the
-        backend's per-layer cache hit/miss/bypass counters when it is
-        cache-capable (CachingBackend)."""
-        out = dict(self._counters)
-        out["scorers"] = self._route_scorers()
-        out["hops"] = self._hops if self._diag_known else None
-        out["path_td"] = self._path_td if self._diag_known else None
-        out["batching"] = self.registry.stats()
-        cache_stats = getattr(self.backend, "cache_stats", None)
-        if cache_stats is not None:
-            out["cache"] = cache_stats()
-        # engine-level mutation counters + the backend's live-state gauges
-        # (delta/tombstone occupancy) when it supports streaming mutation
-        out["mutations"] = dict(self._mutations)
+    def _mutation_view(self) -> dict:
+        """Engine mutation counters + the backend's live-state gauges
+        (delta/tombstone occupancy) when it supports streaming mutation."""
+        out = {op: int(self._m_mutations.value(op=op))
+               for op in ("upserts", "deletes", "merges", "auto_merges")}
         live_stats = getattr(self.backend, "live_stats", None)
         if live_stats is not None:
-            out["mutations"].update(live_stats())
+            out.update(live_stats())
         return out
 
-    def reset_stats(self) -> None:
-        """Zero the routing counters, diagnostics and pad-overhead rows and
-        drop the latency window.  The compiled-shape set survives (it
-        mirrors still-live executables), as do cached *entries*; use
-        backend.clear() to drop those too."""
-        self._counters = {"graph": 0, "brute": 0, "batches": 0}
+    @property
+    def stats(self) -> dict:
+        """Thin view over the one metrics registry (``self.obs.registry``):
+        routing counters; ``scorers`` -- which scorer (exact/pq/sq) serves
+        each route under the engine's options; ``hops``/``path_td``
+        graph-traversal totals (``None`` -- not silently 0 -- when the
+        backend does not report them, e.g. the sharded top-k merge);
+        ``batching`` compiled-shape and pad-overhead counters; the
+        backend's per-layer cache hit/miss/bypass counters when it is
+        cache-capable (CachingBackend); ``obs`` -- trace/slow-query ring
+        occupancy.  ``obs.snapshot()`` / ``obs.prometheus_text()`` export
+        the same registry for machines."""
+        reg = self.obs.registry
+        out = {"graph": int(self._m_requests.value(route="graph")),
+               "brute": int(self._m_requests.value(route="brute")),
+               "batches": int(self._m_batches.value())}
+        out["scorers"] = reg.view("scorers")
+        out["hops"] = (int(self._m_hops.value())
+                       if self._diag_known else None)
+        out["path_td"] = (int(self._m_path_td.value())
+                          if self._diag_known else None)
+        out["batching"] = reg.view("batching")
+        if reg.has_view("cache"):
+            out["cache"] = reg.view("cache")
+        out["mutations"] = reg.view("mutations")
+        out["obs"] = self.obs.summary()
+        return out
+
+    def _on_registry_reset(self) -> None:
+        """Legacy-state half of the reset cascade (see reset_stats)."""
         self.latencies.clear()
-        self._hops = 0
-        self._path_td = 0
         self._diag_known = True
-        self._mutations = {"upserts": 0, "deletes": 0, "merges": 0,
-                           "auto_merges": 0}
         self.registry.reset_rows()
+
+    def reset_stats(self) -> None:
+        """Zero every counter in the stack through the registry's reset
+        cascade: routing/mutation/latency instruments, diagnostics,
+        pad-overhead rows, trace + slow-query rings, cache layer counters,
+        and any front-end tenant/coalesce ledgers hooked onto this engine.
+        The compiled-shape set survives (it mirrors still-live
+        executables), as do cached *entries*; use backend.clear() to drop
+        those too."""
+        self.obs.reset()
 
     def warmup(self, buckets=None) -> tuple[int, ...]:
         """Compile every (estimate/graph/brute, bucket) executable now, so
@@ -260,7 +327,8 @@ class ServeEngine:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, np.asarray(query, np.float32), flt,
-                                  scope=int(scope)))
+                                  scope=int(scope),
+                                  t_submit=self._time()))
         return rid
 
     def _assemble(self) -> list[Request]:
@@ -275,7 +343,7 @@ class ServeEngine:
             return False
         if len(self.queue) >= self.max_batch:
             return True
-        return time.perf_counter() - self.queue[0].t_submit >= self.max_wait_s
+        return self._time() - self.queue[0].t_submit >= self.max_wait_s
 
     def step(self, force: bool = False) -> list[Response]:
         """Drain one batch if it is due (or ``force``); returns completed
@@ -284,7 +352,7 @@ class ServeEngine:
         if not self.queue or not (force or self._due()):
             return []
         batch = self._assemble()
-        self._counters["batches"] += 1
+        self._m_batches.inc()
         queries = np.stack([r.query for r in batch])
         flts = [r.flt for r in batch]
         scopes = [r.scope for r in batch]
@@ -301,21 +369,27 @@ class ServeEngine:
                 flts = flts + [flts[-1]] * (b - len(batch))
                 scopes = scopes + [scopes[-1]] * (b - len(batch))
         res = router.execute(self.backend, queries, flts, self.opts,
-                             registry=self.registry, scopes=scopes)
-        t_done = time.perf_counter()
+                             registry=self.registry, scopes=scopes,
+                             obs=self.obs if self.obs.enabled else None)
+        t_done = self._time()
         if res.hops is None:
             self._diag_known = False
         else:  # slice off legacy whole-batch pad rows, if any
-            self._hops += int(res.hops[:len(batch)].sum())
-            self._path_td += int(res.path_td[:len(batch)].sum())
+            self._m_hops.inc(int(res.hops[:len(batch)].sum()))
+            self._m_path_td.inc(int(res.path_td[:len(batch)].sum()))
         out = []
         for i, r in enumerate(batch):
             route = "brute" if res.routed_brute[i] else "graph"
-            self._counters[route] += 1
+            self._m_requests.inc(route=route)
             lat = t_done - r.t_submit
             self.latencies.append(lat)
+            self._m_latency.observe(lat)
             out.append(Response(r.rid, res.ids[i], res.dists[i], route,
                                 float(res.p_hat[i]), lat))
+        self._m_p_hat.observe_many(res.p_hat[:len(batch)])
+        if self.obs.enabled and self.obs.wants_probe:
+            self.obs.probe(self.backend, queries[:len(batch)],
+                           flts[:len(batch)], res, self.opts)
         self._maybe_merge()
         return out
 
@@ -332,7 +406,7 @@ class ServeEngine:
         if until_empty:
             while self.queue:
                 if not self._due():
-                    rem = self.max_wait_s - (time.perf_counter()
+                    rem = self.max_wait_s - (self._time()
                                              - self.queue[0].t_submit)
                     if rem > 0:
                         time.sleep(rem)

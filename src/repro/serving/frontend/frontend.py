@@ -93,6 +93,14 @@ class FrontEnd:
         self._wake: asyncio.Event | None = None
         self._dispatches = 0
         self._dispatched_rows = 0
+        # join the engine's metrics registry: tenant/coalesce ledgers become
+        # a view (snapshot + prometheus exposition), and engine.reset_stats()
+        # cascades here -- pre-obs, a bench warmup could never zero the
+        # per-tenant counters or the dispatch ledger without rebuilding the
+        # front-end
+        reg = engine.obs.registry
+        reg.register_view("frontend", self._ledger_view)
+        reg.on_reset(self._reset_ledgers)
 
     # -- tenant bookkeeping ---------------------------------------------------
     def _scope_for(self, name: str) -> int:
@@ -274,13 +282,10 @@ class FrontEnd:
         self._task = None
 
     # -- accounting -----------------------------------------------------------
-    @property
-    def stats(self) -> dict:
-        """``tenants`` -- per-tenant submitted/served/shed counters, queue
-        depth, end-to-end p50/p99 and (under a CachingBackend) per-tenant
-        semantic/candidate hit rates; ``coalesce`` -- dispatch count and
-        mean coalesced batch size; ``engine`` -- the engine's own stats
-        (routing, batching/pad ledger, cache layers, mutations)."""
+    def _ledger_view(self) -> dict:
+        """Tenant + coalesce ledgers as one nested dict: the front-end's
+        view on the engine's metrics registry (joins every registry
+        snapshot and Prometheus scrape)."""
         sem_scope, cand_scope = {}, {}
         cache_stats = getattr(self.engine.backend, "cache_stats", None)
         if cache_stats is not None:
@@ -310,5 +315,34 @@ class FrontEnd:
                 "mean_batch": (self._dispatched_rows / self._dispatches
                                if self._dispatches else 0.0),
             },
-            "engine": self.engine.stats,
         }
+
+    def _reset_ledgers(self) -> None:
+        """engine.reset_stats() cascade target: zero the per-tenant
+        submitted/served/shed counters, latency windows and the coalesce
+        dispatch ledger (tenant identities, scopes and queued requests
+        survive -- only the accounting resets)."""
+        self._dispatches = 0
+        self._dispatched_rows = 0
+        for st in self._tenants.values():
+            st.submitted = 0
+            st.served = 0
+            for k in st.shed:
+                st.shed[k] = 0
+            st.latencies.clear()
+
+    def reset_stats(self) -> None:
+        """Zero the whole stack's counters (cascades through the engine's
+        registry: engine + cache + obs + this front-end's ledgers)."""
+        self.engine.reset_stats()
+
+    @property
+    def stats(self) -> dict:
+        """``tenants`` -- per-tenant submitted/served/shed counters, queue
+        depth, end-to-end p50/p99 and (under a CachingBackend) per-tenant
+        semantic/candidate hit rates; ``coalesce`` -- dispatch count and
+        mean coalesced batch size; ``engine`` -- the engine's own stats
+        (routing, batching/pad ledger, cache layers, mutations)."""
+        out = self._ledger_view()
+        out["engine"] = self.engine.stats
+        return out
