@@ -58,9 +58,13 @@ def update_bench_json(section: str, payload: dict,
                       outdir: str = "bench_out") -> str:
     """Merge one benchmark's summary into the stable cross-PR serving JSON.
 
-    Multiple benchmarks (bench_cache, bench_serve_backends) contribute
-    sections to the same file; read-modify-write keeps them from clobbering
-    each other.  A pre-section-layout file (one flat summary) is reset.
+    Multiple benchmarks (bench_cache, bench_serve_backends, bench_qps_recall
+    ``run_scorers``) contribute sections to the same file; read-modify-write
+    keeps them from clobbering each other.  Sections this run did not
+    produce are preserved verbatim -- even when the file also carries legacy
+    pre-section keys (the old wholesale reset on a legacy marker is how the
+    file once shed its ``graph_scorers`` section); only non-dict flat values
+    and the legacy ``bench`` blob are dropped.
     """
     os.makedirs(outdir, exist_ok=True)
     path = os.path.join(outdir, name)
@@ -71,8 +75,10 @@ def update_bench_json(section: str, payload: dict,
                 data = json.load(f)
         except ValueError:
             data = {}
-    if not isinstance(data, dict) or "bench" in data:
-        data = {}  # legacy single-section layout: start fresh
+    if not isinstance(data, dict):
+        data = {}
+    data = {k: v for k, v in data.items()
+            if k != "bench" and isinstance(v, dict)}
     data[section] = payload
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)

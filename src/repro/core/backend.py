@@ -95,6 +95,13 @@ class Backend(Protocol):
         """PreFBF brute route (float32 or compressed); returns (ids, dists)."""
         ...
 
+    def bytes_per_hop(self, opts: SearchOptions) -> int:
+        """Bytes one gathered neighbor row streams from HBM under ``opts``'
+        graph scorer (4*d for f32, M codes for PQ, d codes for SQ) -- the
+        bandwidth story ServeEngine exports as the favor_bytes_per_hop
+        gauge."""
+        ...
+
 
 # ---------------------------------------------------------------------------
 # Local (single-host) backend
@@ -187,7 +194,8 @@ class LocalBackend:
             base = {"ids": np.full((b, opts.k), -1, np.int64),
                     "dists": np.full((b, opts.k), np.inf, np.float32),
                     "hops": np.zeros((b,), np.int32),
-                    "path_td": np.zeros((b,), np.int32)}
+                    "path_td": np.zeros((b,), np.int32),
+                    "waves": np.zeros((b,), np.int32)}
         delta = self._delta()
         if delta is None:
             return base
@@ -239,6 +247,14 @@ class LocalBackend:
         gi, gd = delta.scan(queries, programs, k=opts.k, valid=valid)
         return compose_topk(np.asarray(ids), np.asarray(dists), gi, gd,
                             opts.k)
+
+    # -- accounting -----------------------------------------------------------
+    def bytes_per_hop(self, opts: SearchOptions) -> int:
+        """Bytes one gathered neighbor row streams under ``opts``' graph
+        scorer (see Backend.bytes_per_hop)."""
+        from .scoring import scorer_for
+        return int(scorer_for(opts.search_config())
+                   .bytes_per_row(self.index.g))
 
 
 # ---------------------------------------------------------------------------
@@ -577,6 +593,14 @@ class ShardedBackend:
         return ids, dists
 
     # -- accounting -----------------------------------------------------------
+    def bytes_per_hop(self, opts: SearchOptions) -> int:
+        """Bytes one gathered neighbor row streams under ``opts``' graph
+        scorer (see Backend.bytes_per_hop).  Shard-local: each shard's
+        traversal gathers from its own slice of the code/vector arrays."""
+        if opts.graph_quant is not None:
+            return int(self.sharded.arrays["codes"].shape[1])
+        return 4 * int(self.sharded.arrays["vectors"].shape[1])
+
     def bytes_per_vector(self, quantized: bool = False) -> int:
         """Bytes streamed per DB row by the brute scan on each shard."""
         if quantized:

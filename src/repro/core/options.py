@@ -332,6 +332,14 @@ class SearchOptions:
     jit-static: they lower into SearchConfig, so each (scorer, rerank)
     pair is its own compiled executable.
 
+    ``max_steps`` bounds the total traversal waves (while_loop iterations
+    across the whole lane-compaction ladder); 0 keeps the 8*ef safety
+    bound.  A uniform budget makes scorers comparable on wall-clock:
+    quantized scorers' noisy distances delay Algorithm 3's termination for
+    a few straggler lanes (~1.7x the f32 wave count with identical mean
+    hops), and the cap trims exactly that tail -- lanes stopped at the
+    budget still return their current result pool.
+
     ``batch`` is the shape-stable execution policy (core.batching): when set,
     the router bucket-pads the estimate call and the graph/brute sub-batches
     to pow-2 sizes (pad rows carry always-false filter programs and a False
@@ -345,6 +353,7 @@ class SearchOptions:
     gamma: float = 1.0
     force: str | None = None
     cand_cap: int = 0
+    max_steps: int = 0
     use_pallas: bool = False
     use_pq: bool = False
     rerank: int | None = None
@@ -363,6 +372,9 @@ class SearchOptions:
         if self.cand_cap < 0:
             raise ValueError(f"SearchOptions.cand_cap must be >= 0, "
                              f"got {self.cand_cap}")
+        if self.max_steps < 0:
+            raise ValueError(f"SearchOptions.max_steps must be >= 0, "
+                             f"got {self.max_steps}")
         if self.rerank is not None and self.rerank < 0:
             raise ValueError(f"SearchOptions.rerank must be None or >= 0, "
                              f"got {self.rerank}")
@@ -379,6 +391,7 @@ class SearchOptions:
     def search_config(self) -> SearchConfig:
         """Lower to the jit-static config the compiled executables key on."""
         return SearchConfig(k=self.k, ef=self.ef, cand_cap=self.cand_cap,
+                            max_steps=self.max_steps,
                             pbar_min=self.pbar_min, gamma=self.gamma,
                             use_pallas=self.use_pallas,
                             graph_quant=self.graph_quant,

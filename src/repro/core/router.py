@@ -41,6 +41,10 @@ class SearchResult:
     # merge) -- None-safe so operators can tell "no hops" from "unknown"
     hops: np.ndarray | None     # (B,) or None
     path_td: np.ndarray | None  # (B,) or None
+    # waves: expansion rounds the traversal's lane-compacted while_loop ran
+    # for the query's sub-batch (every lane in a stage shares the wave
+    # count, so this is a batch-shape diagnostic, not a per-lane hop count)
+    waves: np.ndarray | None = None  # (B,) or None
     elapsed_s: float = 0.0
 
     @property
@@ -182,7 +186,9 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
     routed_brute = np.zeros((b,), bool)
     hops = np.zeros((b,), np.int64)
     path_td = np.zeros((b,), np.int64)
+    waves = np.zeros((b,), np.int64)
     graph_diag = True  # False once a graph backend omits hops/path_td
+    waves_diag = True  # False once a graph backend omits waves
 
     lookup = getattr(backend, "lookup_result", None)
     with _span("cache_lookup") as sp:
@@ -254,6 +260,10 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
                     path_td[miss[gi]] = np.asarray(out["path_td"])[:len(gi)]
                 else:
                     graph_diag = False
+                if "waves" in out:
+                    waves[miss[gi]] = np.asarray(out["waves"])[:len(gi)]
+                else:
+                    waves_diag = False
         if len(bi):
             with _span("brute", rows=len(bi)) as bspan:
                 whole = len(bi) == len(miss)
@@ -291,4 +301,6 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
             signatures=lambda: F.batch_signatures(programs))
     return SearchResult(ids, dists, p_hat, routed_brute,
                         hops if graph_diag else None,
-                        path_td if graph_diag else None, elapsed)
+                        path_td if graph_diag else None,
+                        waves=waves if waves_diag else None,
+                        elapsed_s=elapsed)

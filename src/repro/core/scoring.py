@@ -37,6 +37,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Protocol, runtime_checkable
 
+import jax
 import jax.numpy as jnp
 
 GRAPH_QUANT_KINDS = (None, "pq", "sq")
@@ -77,6 +78,9 @@ class Scorer(Protocol):
 
     kind: str    # "exact" | "pq" | "sq" -- the SearchOptions.graph_quant name
     exact: bool  # True -> score_block returns true f32 distances (no re-rank)
+    # optional ``shared_state``: names of prepare() keys that are
+    # query-independent (no leading batch axis); the lane-compaction ladder
+    # slices every other state leaf per stage and must leave these alone
 
     def required_keys(self) -> tuple[str, ...]:
         """g-dict arrays this scorer reads (validation happens host-side)."""
@@ -138,12 +142,18 @@ class PqAdcScorer:
     """Compressed scoring: per-query ADC LUTs + gathered uint8 codes.
 
     ``prepare`` builds the (B, M, K) squared-subdistance tables once
-    (quant.adc.build_luts); each neighbor block is then M table lookups +
-    adds per row -- the gathered-row traffic drops from 4*d to M bytes.
-    ``use_pallas=True`` runs the block-gather ADC kernel
+    (quant.adc.build_luts) and stores them **bfloat16** by default, halving
+    the per-query LUT state; every lookup widens back to float32 before the
+    subspace accumulation, so only the table entries themselves are rounded
+    (~3 significant digits -- noise next to the PQ quantization error, and
+    the traversal's final candidates get an exact f32 re-rank regardless).
+    Each neighbor block is then M table lookups + adds per row, through ONE
+    flat (B, M*K) gather -- the gathered-row traffic drops from 4*d to M
+    bytes.  ``use_pallas=True`` runs the row-batched block-gather ADC kernel
     (kernels/pq_adc.pq_adc_gather) instead of the jnp take_along_axis.
     """
     use_pallas: bool = False
+    lut_bf16: bool = True
     kind = "pq"
     exact = False
 
@@ -152,7 +162,10 @@ class PqAdcScorer:
 
     def prepare(self, g: dict, queries, programs: dict) -> dict:
         from ..quant.adc import build_luts
-        return {"luts": build_luts(g["centroids"], jnp.asarray(queries))}
+        luts = build_luts(g["centroids"], jnp.asarray(queries))
+        if self.lut_bf16:
+            luts = luts.astype(jnp.bfloat16)
+        return {"luts": luts}
 
     def score_block(self, g: dict, state: dict, ids) -> jnp.ndarray:
         luts = state["luts"]
@@ -160,10 +173,19 @@ class PqAdcScorer:
             from ..kernels.pq_adc import ops as pq_ops
             adc2 = pq_ops.pq_adc_gather(g["codes"], luts, ids)
         else:
-            codes = g["codes"][ids].astype(jnp.int32)        # (B, M, m)
-            gath = jnp.take_along_axis(luts[:, None, :, :],
-                                       codes[..., None], axis=3)
-            adc2 = jnp.sum(gath[..., 0], axis=-1)            # (B, M)
+            b, m, k = luts.shape
+            codes = g["codes"][ids].astype(jnp.int32)        # (B, M0, m)
+            # ONE flat jnp.take against the fully flattened (B*M*K) table:
+            # row b / subspace mm / code c addresses entry (b*M + mm)*K + c.
+            # Globalizing the row index lets XLA lower a single 1-d gather
+            # (~2.5x faster on CPU than the per-batch take_along_axis or the
+            # former 4-d broadcast gather).  Indices are stage-local, so
+            # lane compaction's sliced LUTs line up row for row.
+            gidx = ((jnp.arange(b, dtype=jnp.int32)[:, None, None] * m
+                     + jnp.arange(m, dtype=jnp.int32)[None, None, :]) * k
+                    + codes)
+            gath = jnp.take(luts.reshape(-1), gidx)
+            adc2 = jnp.sum(gath.astype(jnp.float32), axis=-1)  # f32 accum
         # sqrt: ADC tables are squared sub-distances; the exclusion D and
         # the termination test live in true-distance units
         return jnp.sqrt(jnp.maximum(adc2, 0.0))
@@ -173,31 +195,61 @@ class PqAdcScorer:
 
     def lut_bytes(self, g: dict, batch: int) -> int:
         m, k = int(g["centroids"].shape[0]), int(g["centroids"].shape[1])
-        return 4 * batch * m * k
+        return (2 if self.lut_bf16 else 4) * batch * m * k
 
 
 @dataclass(frozen=True)
 class SqScorer:
-    """Scalar-quantization scoring: gathered int8 codes dequantized on the
-    fly (4x fewer bytes than f32; exact when the corpus lies on the int8
-    grid, which the lossless bit-parity test exploits)."""
+    """Scalar-quantization scoring: gathered int8 codes contracted against
+    folded affine weights (4x fewer bytes than f32; exact when the corpus
+    lies on the int8 grid, which the lossless bit-parity test exploits).
+
+    With x = c*s + lo (per-dim scale/offset) the squared distance folds to
+
+        d2 = sum_j c_j^2 s_j^2                      (query-independent)
+           + sum_j c_j * (2 s_j lo_j - 2 q_j s_j)   (per-query linear)
+           + ||lo||^2 + ||q||^2 - 2 q.lo            (per-query constant)
+
+    so ``prepare`` bakes the three weight groups once per batch and
+    ``score_block`` touches the gathered codes exactly once -- no (B, M, d)
+    dequantized copy, no recomputed row norms.  The quadratic term is ONE
+    2-d ``dot_general`` with ``preferred_element_type=f32`` (on TPU that is
+    the low-precision-in / f32-accumulate MXU shape; gemv on CPU); the
+    per-query linear term is a multiply + last-axis reduce, NOT a batched
+    dot, for the bucket-size bit-stability ``pairwise_dist`` documents --
+    lane compaction re-invokes the scorer at every stage width, so
+    distances must not depend on the leading batch dimension.
+    """
     kind = "sq"
     exact = False
+    # w2 is query-independent (d, 1) -- exempt from lane-compaction slicing
+    shared_state = ("w2",)
 
     def required_keys(self) -> tuple[str, ...]:
         return ("codes", "sq_lo", "sq_scale")
 
     def prepare(self, g: dict, queries, programs: dict) -> dict:
-        return {"q": jnp.asarray(queries)}
+        q = jnp.asarray(queries)
+        s, lo = g["sq_scale"], g["sq_lo"]
+        qn = jnp.sum(q * q, axis=-1)                          # (B,)
+        return {
+            "w2": (s * s)[:, None],                           # (d, 1)
+            "w_lin": 2.0 * s[None, :] * (lo[None, :] - q),    # (B, d)
+            # mul+reduce (not q @ lo): bit-stable across bucket widths
+            "const": jnp.sum(lo * lo) + qn
+                     - 2.0 * jnp.sum(q * lo[None, :], axis=-1),
+        }
 
     def score_block(self, g: dict, state: dict, ids) -> jnp.ndarray:
-        q = state["q"]
-        deq = (g["codes"][ids].astype(jnp.float32) * g["sq_scale"][None, None]
-               + g["sq_lo"][None, None])                     # (B, M, d)
-        qn = jnp.sum(q * q, axis=-1)
-        dn = jnp.sum(deq * deq, axis=-1)
-        dot = jnp.sum(q[:, None, :] * deq, axis=-1)
-        return jnp.sqrt(jnp.maximum(dn + qn[:, None] - 2.0 * dot, 0.0))
+        c = g["codes"][ids].astype(jnp.float32)               # (B, M, d)
+        b, m0, d = c.shape
+        quad = jax.lax.dot_general(
+            (c * c).reshape(b * m0, d), state["w2"],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(b, m0)
+        lin = jnp.sum(c * state["w_lin"][:, None, :], axis=-1)
+        d2 = quad + lin + state["const"][:, None]
+        return jnp.sqrt(jnp.maximum(d2, 0.0))
 
     def bytes_per_row(self, g: dict) -> int:
         return int(g["codes"].shape[1])

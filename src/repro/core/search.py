@@ -22,7 +22,13 @@ TPU-native realization of Algorithms 2 + 3 (DESIGN.md section 3):
    AND the TD-fraction guard ``pbar > pbar_min`` (0 disables);
  * the visited set is a packed per-query uint32 bitfield
    ``(B, ceil(N/32))`` -- 8x less HBM per lane than the former (B, N) bool
-   bitmap at multi-million-N scale.
+   bitmap at multi-million-N scale;
+ * the while_loop is *lane-compacted* (``SearchConfig.lane_compact``): a
+   static ladder of stage widths B, B/2, ... -- each stage exits once the
+   active-lane population fits the next, survivors are packed into a
+   half-width batch, and finished lanes stop costing wave work.  Results
+   are bit-identical to the single-stage loop because every per-lane op is
+   row-wise and every scorer is bit-stable across batch sizes.
 
 ``favor_graph_search`` (exclusion distances) and ``rsf_graph_search``
 (result-set-filtering baseline: D = 0, R admits TD only) are two thin
@@ -65,6 +71,13 @@ class SearchConfig:
     graph_quant: str | None = None  # None (f32) | "pq" | "sq" scorer
     graph_rerank: int = 4      # exact-re-rank depth: top max(k, rr*k) TD
                                # candidates, capped at ef (quantized only)
+    lane_compact: int = 2      # halve the wave width whenever the active-lane
+                               # population fits the next stage, down to this
+                               # floor (0 disables; results are bit-identical).
+                               # 2 keeps straggler waves cheap -- quantized
+                               # scorers run ~1.7x more waves than f32 (noisy
+                               # distances delay termination), almost all in
+                               # the compacted tail
 
     @property
     def ccap(self) -> int:
@@ -73,6 +86,17 @@ class SearchConfig:
     @property
     def steps(self) -> int:
         return self.max_steps or 8 * self.ef
+
+    def stage_sizes(self, b: int) -> tuple[int, ...]:
+        """The static lane-count ladder the traversal runs through for a
+        batch of ``b`` queries: full width first, then repeated halvings
+        while the next stage still holds >= ``lane_compact`` lanes.  One
+        entry -> no compaction (the pre-compaction behavior)."""
+        sizes = [b]
+        if self.lane_compact > 0:
+            while sizes[-1] // 2 >= self.lane_compact:
+                sizes.append(sizes[-1] // 2)
+        return tuple(sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -315,84 +339,102 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
     hops = jnp.zeros((B,), jnp.int32)
     path_td = jnp.zeros((B,), jnp.int32)
 
-    def cond(s):
-        return jnp.any(s["active"]) & (s["step"] < cfg.steps)
+    def stage_loop(state, programs, D, sstate, limit: int):
+        """One while_loop over the (possibly compacted) lane set.
 
-    def body(s):
-        cand_d, cand_i = s["cand_d"], s["cand_i"]
-        res_d, res_i, res_t = s["res_d"], s["res_i"], s["res_t"]
-        active = s["active"]
+        ``limit > 0`` adds the compaction exit: the loop also stops once the
+        active-lane population fits the next (half-width) stage, so the
+        caller can gather the survivors into a narrower batch.  Every op in
+        the body is row-wise (argmin/merge/gather per lane) and every scorer
+        is bit-stable across batch sizes (see ``pairwise_dist``), so lanes
+        produce identical trajectories whichever stage width carries them.
+        """
+        S = state["active"].shape[0]
+        rows = jnp.arange(S)
 
-        # -- extract argmin of C (Algorithm 3 line 6) ------------------------
-        j = jnp.argmin(cand_d, axis=1)
-        da = cand_d[rows, j]
-        va = cand_i[rows, j]
-        cand_d = jnp.where(active[:, None],
-                           cand_d.at[rows, j].set(INF), cand_d)
+        def cond(s):
+            go = jnp.any(s["active"]) & (s["step"] < cfg.steps)
+            if limit > 0:
+                go = go & (jnp.sum(s["active"]) > limit)
+            return go
 
-        # -- termination (line 8, with section 5.4 guard) --------------------
-        worst = jnp.max(res_d, axis=1)               # +inf while R not full
-        full = jnp.isfinite(worst)
-        plain_term = (da > cfg.gamma * worst) & full
-        if rsf:
-            guard_ok = jnp.ones((B,), bool)
-        else:
-            n_valid = jnp.sum(jnp.isfinite(res_d), axis=1)
-            n_td = jnp.sum(res_t & jnp.isfinite(res_d), axis=1)
-            pbar = n_td / jnp.maximum(n_valid, 1)
-            guard_ok = (cfg.pbar_min <= 0.0) | (pbar > cfg.pbar_min)
-        terminate = plain_term & guard_ok
-        exhausted = ~jnp.isfinite(da)
-        new_active = active & ~terminate & ~exhausted
-        expand = new_active                          # lanes that expand v_a
+        def body(s):
+            cand_d, cand_i = s["cand_d"], s["cand_i"]
+            res_d, res_i, res_t = s["res_d"], s["res_i"], s["res_t"]
+            active = s["active"]
 
-        # -- gather + score the neighbor block -------------------------------
-        va_safe = jnp.maximum(va, 0)
-        nbrs = jnp.where(expand[:, None], g["neighbors0"][va_safe], -1)  # (B, M0)
-        ok = nbrs >= 0
-        safe = jnp.maximum(nbrs, 0)
-        seen = _seen_bits(s["visited"], rows, safe)
-        new = ok & ~seen
-        visited = _visit_bits(s["visited"], rows, safe, new)
+            # -- extract argmin of C (Algorithm 3 line 6) --------------------
+            j = jnp.argmin(cand_d, axis=1)
+            da = cand_d[rows, j]
+            va = cand_i[rows, j]
+            cand_d = jnp.where(active[:, None],
+                               cand_d.at[rows, j].set(INF), cand_d)
 
-        # profiling scope: stamps the per-wave gather+score+filter ops into
-        # HLO metadata so device traces attribute traversal time to waves
-        # (trace-time only; see repro.obs.profiling)
-        with jax.named_scope("favor.graph_wave"):
-            d = scorer.score_block(g, sstate, safe)
-            td = F.eval_program_gathered(
-                programs, g["attrs_int"][safe], g["attrs_float"][safe],
-                xp=jnp)
+            # -- termination (line 8, with section 5.4 guard) ----------------
+            worst = jnp.max(res_d, axis=1)           # +inf while R not full
+            full = jnp.isfinite(worst)
+            plain_term = (da > cfg.gamma * worst) & full
+            if rsf:
+                guard_ok = jnp.ones((S,), bool)
+            else:
+                n_valid = jnp.sum(jnp.isfinite(res_d), axis=1)
+                n_td = jnp.sum(res_t & jnp.isfinite(res_d), axis=1)
+                pbar = n_td / jnp.maximum(n_valid, 1)
+                guard_ok = (cfg.pbar_min <= 0.0) | (pbar > cfg.pbar_min)
+            terminate = plain_term & guard_ok
+            exhausted = ~jnp.isfinite(da)
+            new_active = active & ~terminate & ~exhausted
+            expand = new_active                      # lanes that expand v_a
+
+            # -- gather + score the neighbor block ---------------------------
+            va_safe = jnp.maximum(va, 0)
+            nbrs = jnp.where(expand[:, None], g["neighbors0"][va_safe], -1)  # (S, M0)
+            ok = nbrs >= 0
+            safe = jnp.maximum(nbrs, 0)
+            seen = _seen_bits(s["visited"], rows, safe)
+            new = ok & ~seen
+            visited = _visit_bits(s["visited"], rows, safe, new)
+
+            # profiling scope: stamps the per-wave gather+score+filter ops
+            # into HLO metadata so device traces attribute traversal time to
+            # waves (trace-time only; see repro.obs.profiling)
+            with jax.named_scope("favor.graph_wave"):
+                d = scorer.score_block(g, sstate, safe)
+                td = F.eval_program_gathered(
+                    programs, g["attrs_int"][safe], g["attrs_float"][safe],
+                    xp=jnp)
+                if alive is not None:
+                    td = td & alive[safe]
+                key = exclusion_compose(d, td, D[:, None])   # Eq. 2
+
+            # -- pool insertion (lines 15-24) --------------------------------
+            worst_now = jnp.max(res_d, axis=1)       # +inf when R not full
+            eligible = new & (key < worst_now[:, None])
+            res_ok = (eligible & td) if rsf else eligible
+            res_d, res_i, res_t = _merge_pool(
+                res_d, res_i, res_t,
+                jnp.where(res_ok, key, INF), jnp.where(res_ok, nbrs, -1),
+                td & res_ok, ef)
+            cand_d, cand_i, _ = _merge_pool(
+                cand_d, cand_i, jnp.zeros_like(cand_i, bool),
+                jnp.where(eligible, key, INF), jnp.where(eligible, nbrs, -1),
+                jnp.zeros_like(nbrs, bool), ccap)
+
+            va_td = F.eval_program_gathered(
+                programs, g["attrs_int"][va_safe][:, None, :],
+                g["attrs_float"][va_safe][:, None, :], xp=jnp)[:, 0]
             if alive is not None:
-                td = td & alive[safe]
-            key = exclusion_compose(d, td, D[:, None])   # Eq. 2
+                va_td = va_td & alive[va_safe]
+            return {
+                "cand_d": cand_d, "cand_i": cand_i,
+                "res_d": res_d, "res_i": res_i, "res_t": res_t,
+                "visited": visited, "active": new_active,
+                "step": s["step"] + 1,
+                "hops": s["hops"] + expand.astype(jnp.int32),
+                "path_td": s["path_td"] + (expand & va_td).astype(jnp.int32),
+            }
 
-        # -- pool insertion (lines 15-24) -------------------------------------
-        worst_now = jnp.max(res_d, axis=1)           # +inf when R not full
-        eligible = new & (key < worst_now[:, None])
-        res_ok = (eligible & td) if rsf else eligible
-        res_d, res_i, res_t = _merge_pool(
-            res_d, res_i, res_t,
-            jnp.where(res_ok, key, INF), jnp.where(res_ok, nbrs, -1),
-            td & res_ok, ef)
-        cand_d, cand_i, _ = _merge_pool(
-            cand_d, cand_i, jnp.zeros_like(cand_i, bool),
-            jnp.where(eligible, key, INF), jnp.where(eligible, nbrs, -1),
-            jnp.zeros_like(nbrs, bool), ccap)
-
-        va_td = F.eval_program_gathered(
-            programs, g["attrs_int"][va_safe][:, None, :],
-            g["attrs_float"][va_safe][:, None, :], xp=jnp)[:, 0]
-        if alive is not None:
-            va_td = va_td & alive[va_safe]
-        return {
-            "cand_d": cand_d, "cand_i": cand_i,
-            "res_d": res_d, "res_i": res_i, "res_t": res_t,
-            "visited": visited, "active": new_active,
-            "step": s["step"] + 1,
-            "hops": s["hops"] + expand.astype(jnp.int32),
-            "path_td": s["path_td"] + (expand & va_td).astype(jnp.int32),
-        }
+        return jax.lax.while_loop(cond, body, state)
 
     state = {
         "cand_d": cand_d, "cand_i": cand_i,
@@ -400,8 +442,48 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
         "visited": visited, "active": active,
         "step": jnp.asarray(0, jnp.int32), "hops": hops, "path_td": path_td,
     }
+
+    # --- lane-compacted traversal: a static ladder of stage widths ----------
+    # The full-width loop exits as soon as the active-lane population fits
+    # half the batch; survivors are packed (active-first, original order --
+    # a stable argsort on the inactive flag) into the next stage and the
+    # finished lanes' pools are scattered back into the full-width buffers.
+    # A padded bucket (or a long straggler tail) therefore stops paying
+    # B-wide waves the moment most lanes are done, instead of running every
+    # wave at the width of the slowest lane.  Each stage is one more traced
+    # while_loop inside the SAME jitted executable, so the compiled-shape
+    # count per bucket is unchanged (the CI compile guard asserts this).
+    sizes = cfg.stage_sizes(B)
+    out_keys = ("res_d", "res_i", "res_t", "hops", "path_td")
+    final = {k: state[k] for k in out_keys}
+    perm = jnp.arange(B)
+    progs_s, D_s, sstate_s = programs, D, sstate
     with jax.named_scope("favor.graph_traverse"):
-        state = jax.lax.while_loop(cond, body, state)
+        for si, S in enumerate(sizes):
+            limit = sizes[si + 1] if si + 1 < len(sizes) else 0
+            state = stage_loop(state, progs_s, D_s, sstate_s, limit)
+            if len(sizes) == 1:
+                final = {k: state[k] for k in out_keys}
+                break
+            final = {k: final[k].at[perm].set(state[k]) for k in out_keys}
+            if si + 1 < len(sizes):
+                nxt = sizes[si + 1]
+                sel = jnp.argsort(~state["active"], stable=True)[:nxt]
+                perm = perm[sel]
+                state = {k: (v if k == "step" else v[sel])
+                         for k, v in state.items()}
+                progs_s = {k: v[sel] for k, v in progs_s.items()}
+                D_s = D_s[sel]
+                # scorer state is per-query EXCEPT the keys the scorer
+                # declares shared (e.g. SqScorer's query-independent
+                # quadratic weights) -- those must not be lane-sliced
+                shared = getattr(scorer, "shared_state", ())
+                sstate_s = {
+                    k: (v if k in shared
+                        else jax.tree_util.tree_map(lambda a: a[sel], v))
+                    for k, v in sstate_s.items()}
+    waves = state["step"]
+    state = final
 
     # --- final S: k nearest TD in R (Algorithm 2 line 9) --------------------
     sd = jnp.where(state["res_t"], state["res_d"], INF)  # TD dbar == scorer dist
@@ -429,7 +511,10 @@ def _graph_traverse(g: dict, queries: jnp.ndarray, programs: dict,
         if valid is not None:
             out_i = jnp.where(jnp.asarray(valid, bool)[:, None], out_i, -1)
     return {"ids": out_i, "dists": out_d,
-            "hops": state["hops"], "path_td": state["path_td"]}
+            "hops": state["hops"], "path_td": state["path_td"],
+            # broadcast: a wave is a batch-wide event (every co-resident lane
+            # pays it), so each query reports the ladder's total wave count
+            "waves": jnp.broadcast_to(waves, state["hops"].shape)}
 
 
 # ---------------------------------------------------------------------------
@@ -451,7 +536,9 @@ def favor_graph_search(g: dict, queries: jnp.ndarray, programs: dict,
                 start inactive -- they never expand a node, cost no search
                 work, and return ids=-1 / dists=+inf / hops=0
     returns   : {"ids": (B,k) int32 (-1 pad), "dists": (B,k) f32 (+inf pad),
-                 "hops": (B,), "path_td": (B,)}
+                 "hops": (B,), "path_td": (B,), "waves": (B,) int32 -- total
+                 while_loop iterations across the compaction stage ladder
+                 (batch-wide, so identical for every lane of the batch)}
     """
     return _graph_traverse(g, queries, programs, D, cfg, scorer_for(cfg),
                            valid, rsf=False)

@@ -7,7 +7,9 @@ whole code table for a tile of queries,
   top-R candidate list lives in VMEM scratch across n-tiles.
 
 Per (i, j) step, entirely in VMEM:
-  * load the query LUT tile (bq, M*K) and the code tile (bn, M) int32,
+  * load the query LUT tile (bq, M*K) and the code tile (bn, M) **uint8**
+    (codes stream from HBM in their stored byte layout -- widening to int32
+    happens in-register, never in memory traffic),
   * ADC accumulation as M one-hot matmuls: for each subspace the code column
     becomes a (bn, K) one-hot and contracts with the (bq, K) LUT slice on the
     MXU -- a gather expressed as arithmetic, since TPU Pallas has no
@@ -19,6 +21,19 @@ Per (i, j) step, entirely in VMEM:
 
 VMEM working set per step: bq*M*K + bn*M + bn*K + bq*bn + bq*R floats;
 defaults (bq, bn, M, K) = (128, 512, 8, 256) stay well under 16 MB.
+
+The graph-route sibling ``pq_adc_gather_pallas`` is **row-batched**: one
+sequential pass per bq-query tile stages the whole (bq, M0) gathered
+neighbor code block into VMEM scratch (one uint8 row DMA per inner grid
+step, picked by the scalar-prefetch index_map), then scores all bq*M0 rows
+against the LUT tile with the same M one-hot MXU matmuls the full-scan
+kernel uses and slices each query's own M0 columns off the result cube.
+That replaces the former per-(query, neighbor)-cell launch whose LUT lookup
+ran as M*K scalar fmas on the VPU -- the MXU form does bq x redundant math
+(every query scores every staged row) but turns ~bq*M0*M*K scalar ops per
+tile into M dense (bq, K) x (K, bq*M0) contractions, which is the shape the
+hardware is actually fast at.  Keep bq small (default 8, one MXU sublane
+block): the redundancy factor is exactly bq.
 """
 from __future__ import annotations
 
@@ -42,8 +57,8 @@ def _kernel(lut_ref, c_ref, n_ref, ai_ref, af_ref, valid_ref, imask_ref,
         bd_ref[...] = jnp.full_like(bd_ref, BIG)
         bi_ref[...] = jnp.full_like(bi_ref, -1)
 
-    lut = lut_ref[...]                  # (bq, M*K)
-    codes = c_ref[...]                  # (bn, M) int32
+    lut = lut_ref[...].astype(jnp.float32)   # (bq, M*K); accepts bf16 tables
+    codes = c_ref[...].astype(jnp.int32)     # (bn, M) uint8 -> in-register
     kcols = jax.lax.broadcasted_iota(jnp.int32, (1, ksub), 1)
     acc = jnp.zeros((lut.shape[0], bn), jnp.float32)
     for mm in range(m):                 # static unroll: M is small (<= 32)
@@ -68,61 +83,89 @@ def _kernel(lut_ref, c_ref, n_ref, ai_ref, af_ref, valid_ref, imask_ref,
     oi_ref[...] = bi
 
 
-def _gather_kernel(idx_ref, lut_ref, c_ref, o_ref, *, m: int, ksub: int):
-    """One (query, neighbor) cell: ADC-accumulate the gathered code row.
+def _gather_kernel(idx_ref, lut_ref, c_ref, ids_ref, o_ref, stage_ref,
+                   *, bq: int, m0: int, m: int, ksub: int):
+    """Row-batched gather scoring: stage bq*M0 code rows, then M MXU matmuls.
 
-    The code row arrives via the scalar-prefetch index_map (the same
-    paged-attention indirection gather_distance uses); the LUT slice is the
-    query's full (1, M*K) table.  TPU Pallas has no in-kernel vector gather,
-    so the per-subspace lookup is an (M, K) one-hot mask-and-reduce on the
-    VPU -- M*K fmas per neighbor, tiny next to the row DMA it replaces.
+    The inner grid axis walks the bq-query tile's flattened (bq*M0,) neighbor
+    list; each step's code row arrives via the scalar-prefetch index_map (the
+    paged-attention indirection gather_distance uses) and is parked in the
+    VMEM ``stage_ref`` block.  The last step scores the whole staged block
+    against the LUT tile exactly like the full-scan kernel -- per subspace a
+    (bq*M0, K) one-hot contracts with the (bq, K) LUT slice on the MXU --
+    and extracts each query's own M0-slice from the (bq, bq, M0) result cube
+    (row j of the stage belongs to query j // M0).
     """
-    b = pl.program_id(0)
-    mm = pl.program_id(1)
-    raw = idx_ref[b, mm]
+    j = pl.program_id(1)
+    r0 = bq * m0
 
-    # codes stay uint8 end to end -- the row DMA moves M bytes, not 4*M
-    # (the whole point of scoring on codes); widen in-register for the
-    # comparison only
-    codes = c_ref[0].astype(jnp.int32)                  # (M,)
-    lut = lut_ref[...].reshape(m, ksub)                 # (M, K)
-    kcols = jax.lax.broadcasted_iota(jnp.int32, (m, ksub), 1)
-    oh = (codes[:, None] == kcols).astype(jnp.float32)
-    adc = jnp.sum(lut * oh)
+    # one uint8 row DMA per step: M bytes of HBM traffic per neighbor
+    stage_ref[pl.ds(j, 1), :] = c_ref[...].astype(jnp.int32)
 
-    o_ref[0, 0] = jnp.where(raw < 0, BIG, adc)
+    @pl.when(j == r0 - 1)
+    def _score():
+        codes = stage_ref[...]                     # (bq*M0, M)
+        lut = lut_ref[...].astype(jnp.float32)     # (bq, M*K); accepts bf16
+        kcols = jax.lax.broadcasted_iota(jnp.int32, (1, ksub), 1)
+        acc = jnp.zeros((bq, r0), jnp.float32)
+        for mm in range(m):             # static unroll: M is small (<= 32)
+            oh = (codes[:, mm:mm + 1] == kcols).astype(jnp.float32)
+            acc = acc + jax.lax.dot_general(
+                lut[:, mm * ksub:(mm + 1) * ksub], oh,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)               # MXU
+        # every query scored every staged row (bq x redundant, MXU-cheap);
+        # keep the diagonal blocks of the (bq, bq, M0) cube
+        cube = acc.reshape(bq, bq, m0)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (bq, bq), 0)
+        qj = jax.lax.broadcasted_iota(jnp.int32, (bq, bq), 1)
+        eye = (qi == qj).astype(jnp.float32)
+        out = jnp.sum(cube * eye[:, :, None], axis=1)             # (bq, M0)
+        o_ref[...] = jnp.where(ids_ref[...] < 0, BIG, out)
 
 
-def pq_adc_gather_pallas(nbr_ids, luts, codes, *, interpret: bool):
-    """Block-gather ADC scoring (graph-route sibling of pq_adc_pallas).
+def pq_adc_gather_pallas(nbr_ids, luts, codes, *, block_q: int,
+                         interpret: bool):
+    """Row-batched block-gather ADC scoring (graph-route sibling of
+    pq_adc_pallas).
 
-    nbr_ids (B, M0) int32 (-1 pad); luts (B, M*K) flattened; codes (N, M)
-    uint8 -- NOT widened host-side, so each gathered row streams M bytes.
+    nbr_ids (B, M0) int32 (-1 pad); luts (B, M*K) flattened (f32 or bf16);
+    codes (N, M) uint8 -- NOT widened host-side, so each gathered row
+    streams M bytes.  B must be a multiple of block_q (ops.py pads).
     Returns adc_d2 (B, M0) float32 with BIG at padding.
     """
     b, m0 = nbr_ids.shape
     n, m = codes.shape
     mk = luts.shape[1]
     ksub = mk // m
+    bq = block_q
+    assert b % bq == 0
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(b, m0),
+        grid=(b // bq, bq * m0),
         in_specs=[
-            pl.BlockSpec((1, mk), lambda bi, mi, idx: (bi, 0)),   # LUT row
+            pl.BlockSpec((bq, mk), lambda i, j, idx: (i, 0)),     # LUT tile
             pl.BlockSpec((1, m),                                  # code[gather]
-                         lambda bi, mi, idx: (jnp.maximum(idx[bi, mi], 0), 0)),
+                         lambda i, j, idx: (
+                             jnp.maximum(idx[i * bq + j // m0, j % m0], 0),
+                             0)),
+            pl.BlockSpec((bq, m0), lambda i, j, idx: (i, 0)),     # raw ids
         ],
         out_specs=[
-            pl.BlockSpec((1, 1), lambda bi, mi, idx: (bi, mi)),
+            pl.BlockSpec((bq, m0), lambda i, j, idx: (i, 0)),
+        ],
+        scratch_shapes=[
+            # staged gathered code rows for the whole query tile
+            pltpu.VMEM((bq * m0, m), jnp.int32),
         ],
     )
     (out,) = pl.pallas_call(
-        functools.partial(_gather_kernel, m=m, ksub=ksub),
+        functools.partial(_gather_kernel, bq=bq, m0=m0, m=m, ksub=ksub),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((b, m0), jnp.float32)],
         interpret=interpret,
-    )(nbr_ids, luts, codes)
+    )(nbr_ids, luts, codes, nbr_ids)
     return out
 
 

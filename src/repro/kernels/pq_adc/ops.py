@@ -11,14 +11,20 @@ from ..filtered_topk.ops import _pad_rows
 from .kernel import BIG, pq_adc_gather_pallas, pq_adc_pallas
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def pq_adc_gather(codes, luts, nbr_ids, *, interpret: bool | None = None):
-    """Graph-expansion ADC scoring (Pallas block-gather variant).
+@partial(jax.jit, static_argnames=("block_q", "interpret"))
+def pq_adc_gather(codes, luts, nbr_ids, *, block_q: int = 8,
+                  interpret: bool | None = None):
+    """Graph-expansion ADC scoring (row-batched Pallas block-gather).
 
-    codes (N, M) uint8/int32; luts (B, M, K) from quant.adc.build_luts;
-    nbr_ids (B, M0) int32 per-query neighbor ids (-1 pad -> +inf).  Returns
-    adc_d2 (B, M0) float32 -- squared approximate distances; the traversal
-    masks pad/visited entries and re-ranks its final candidates exactly.
+    codes (N, M) uint8/int32; luts (B, M, K) from quant.adc.build_luts (f32
+    or bf16 -- accumulation is f32 either way); nbr_ids (B, M0) int32
+    per-query neighbor ids (-1 pad -> +inf).  Returns adc_d2 (B, M0) float32
+    -- squared approximate distances; the traversal masks pad/visited
+    entries and re-ranks its final candidates exactly.
+
+    B is padded up to a block_q multiple with -1 ids (scored then sliced
+    off); block_q is also the kernel's redundant-scoring factor, so keep it
+    at one MXU sublane block.
     """
     b, m, ksub = luts.shape
     if interpret is None:
@@ -30,9 +36,12 @@ def pq_adc_gather(codes, luts, nbr_ids, *, interpret: bool | None = None):
         # codes pass through in their stored uint8 layout: widening here
         # would materialize a 4x corpus copy and quadruple every gathered
         # row's DMA
-        out = pq_adc_gather_pallas(
-            nbr_ids.astype(jnp.int32), luts.reshape(b, m * ksub),
-            codes, interpret=interpret)
+        bq = min(block_q, max(1, b))
+        b_pad = ((b + bq - 1) // bq) * bq
+        ids = _pad_rows(nbr_ids.astype(jnp.int32), b_pad, -1)
+        luts_p = _pad_rows(luts.reshape(b, m * ksub), b_pad, 0)
+        out = pq_adc_gather_pallas(ids, luts_p, codes,
+                                   block_q=bq, interpret=interpret)[:b]
         return jnp.where(out >= BIG, jnp.inf, out)
 
 
@@ -55,9 +64,11 @@ def pq_adc_topr(codes, norms, ints, floats, luts, programs, *,
     bq = min(block_q, max(8, b))
     bn = min(block_n, max(32, n))
 
-    # pad DB rows: BIG norms mark padded rows, any code word is fine
+    # pad DB rows: BIG norms mark padded rows, any code word is fine.
+    # codes keep their stored (uint8) dtype -- the kernel widens in-register,
+    # so every code tile DMA moves 1 byte per entry instead of 4
     n_pad = ((n + bn - 1) // bn) * bn
-    codes = _pad_rows(codes.astype(jnp.int32), n_pad, 0)
+    codes = _pad_rows(codes, n_pad, 0)
     norms = _pad_rows(jnp.minimum(norms, BIG), n_pad, BIG)
     ints = _pad_rows(ints, n_pad, 0)
     floats = _pad_rows(floats, n_pad, jnp.nan)

@@ -58,9 +58,10 @@ def _adc_scan(codes, norms, ints, floats, luts, programs, *, r: int,
               chunk: int):
     """Chunked compressed scan -> top-R (adc_d2 (B,R), ids (B,R))."""
     n, m = codes.shape
-    b = luts.shape[0]
+    b, _, ksub = luts.shape
     assert n % chunk == 0, f"N={n} not a multiple of chunk={chunk}"
     n_chunks = n // chunk
+    luts_flat = luts.reshape(b, m * ksub)
 
     cc = codes.reshape(n_chunks, chunk, m)
     nc = norms.reshape(n_chunks, chunk)
@@ -71,9 +72,12 @@ def _adc_scan(codes, norms, ints, floats, luts, programs, *, r: int,
     def step(carry, xs):
         best_d, best_i = carry
         c, nn, ii, ff, start = xs
-        idx = c.astype(jnp.int32)[None, :, :, None]          # (1, chunk, M, 1)
-        g = jnp.take_along_axis(luts[:, None, :, :], idx, axis=3)
-        adc = jnp.sum(g[..., 0], axis=-1)                    # (B, chunk)
+        # one flat gather on the (B, M*K) table -- subspace mm's code
+        # addresses entry mm*K + code (see PqAdcScorer.score_block)
+        flat = (c.astype(jnp.int32)
+                + (jnp.arange(m, dtype=jnp.int32) * ksub)[None, :])
+        g = jnp.take_along_axis(luts_flat[:, None, :], flat[None], axis=2)
+        adc = jnp.sum(g.astype(jnp.float32), axis=-1)        # (B, chunk)
         mask = F.eval_program_batched(programs, ii, ff, xp=jnp)
         ok = mask & jnp.isfinite(nn)[None, :]                # padded rows out
         adc = jnp.where(ok, adc, INF)

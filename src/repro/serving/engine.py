@@ -40,6 +40,11 @@ from ..obs import Obs
 # the selectivity-band request distribution is readable off one histogram
 P_HAT_BUCKETS = (0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0)
 
+# traversal wave counts: bounded by SearchConfig.steps (default 64 plus a
+# compaction-ladder tail), pow-2 edges so the lane-compaction win (fewer
+# full-width waves) shows up as mass shifting left
+WAVE_BUCKETS = (4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
+
 
 @dataclass
 class Request:
@@ -164,6 +169,18 @@ class ServeEngine:
         self._m_path_td = reg.counter(
             "favor_graph_path_td_total",
             "Exclusion-distance path totals across served requests")
+        self._m_waves = reg.histogram(
+            "favor_graph_waves",
+            "Traversal wave count (lane-compacted while_loop iterations) "
+            "observed by each served request, by route",
+            labels=("route",), buckets=WAVE_BUCKETS)
+        self._m_bytes_hop = reg.gauge(
+            "favor_bytes_per_hop",
+            "Bytes one gathered neighbor row streams from HBM under this "
+            "engine's graph scorer (4*d f32, M codes PQ, d codes SQ)")
+        bph = getattr(self._base_backend(), "bytes_per_hop", None)
+        if bph is not None:
+            self._m_bytes_hop.set(float(bph(self.opts)))
         self._m_mutations = reg.counter(
             "favor_mutations_total", "Live-index mutations, by operation",
             labels=("op",))
@@ -228,14 +245,19 @@ class ServeEngine:
             self._m_mutations.inc(op="merges")
             self._m_mutations.inc(op="auto_merges")
 
+    def _base_backend(self):
+        """The innermost backend (cache decorators unwrapped)."""
+        target = self.backend
+        inner = getattr(target, "inner", None)
+        while inner is not None:
+            target, inner = inner, getattr(inner, "inner", None)
+        return target
+
     def _route_scorers(self) -> dict:
         """Which scorer serves each route under this engine's options:
         the graph route per ``opts.graph_quant`` (core.scoring), the brute
         route per ``opts.use_pq`` + the backend's code kind."""
-        target = self.backend
-        inner = getattr(target, "inner", None)
-        while inner is not None:        # unwrap cache decorators
-            target, inner = inner, getattr(inner, "inner", None)
+        target = self._base_backend()
         kind = getattr(target, "quant", None)
         if kind is None:
             kind = getattr(getattr(target, "index", None), "quantize", None)
@@ -274,6 +296,11 @@ class ServeEngine:
                        if self._diag_known else None)
         out["path_td"] = (int(self._m_path_td.value())
                           if self._diag_known else None)
+        out["bytes_per_hop"] = (int(self._m_bytes_hop.value())
+                                or None)  # 0 = backend doesn't report it
+        n_waves = self._m_waves.count(route="graph")
+        out["graph_waves_avg"] = (self._m_waves.sum(route="graph") / n_waves
+                                  if n_waves else None)
         out["batching"] = reg.view("batching")
         if reg.has_view("cache"):
             out["cache"] = reg.view("cache")
@@ -381,6 +408,10 @@ class ServeEngine:
         for i, r in enumerate(batch):
             route = "brute" if res.routed_brute[i] else "graph"
             self._m_requests.inc(route=route)
+            # waves==0 means no traversal ran for this lane (cache hit):
+            # keep those out of the per-route traversal-depth histogram
+            if res.waves is not None and route == "graph" and res.waves[i]:
+                self._m_waves.observe(float(res.waves[i]), route=route)
             lat = t_done - r.t_submit
             self.latencies.append(lat)
             self._m_latency.observe(lat)

@@ -143,6 +143,59 @@ def test_pq_adc_gather_sweep(n, d, b, m0, m, nbits):
     assert np.corrcoef(true2, approx)[0, 1] > 0.9
 
 
+def test_pq_adc_gather_edge_rows():
+    """Row-batched gather at awkward shapes: b not a block_q multiple, M0
+    odd, one row entirely -1 pads -- oracle parity plus the all-inf
+    contract for the padded row, for f32 and bf16 LUTs."""
+    from repro.kernels.pq_adc import ops as pq_ops
+    from repro.kernels.pq_adc import ref as pq_ref
+    from repro.quant import encode, train_pq
+    from repro.quant.adc import build_luts
+    rng = np.random.default_rng(31)
+    n, d, b, m0 = 300, 16, 3, 5
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    cb = train_pq(vecs, m=8, nbits=8, iters=4, seed=0)
+    codes = jnp.asarray(encode(cb, vecs))
+    assert codes.dtype == jnp.uint8    # streamed uncast end-to-end
+    qs = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    luts = build_luts(jnp.asarray(cb.centroids), qs)
+    nbrs = rng.integers(0, n, size=(b, m0)).astype(np.int32)
+    nbrs[1] = -1                       # a fully padded lane
+    nbrs[0, 2] = -1
+    nbrs = jnp.asarray(nbrs)
+    ref = np.asarray(pq_ref.pq_adc_gather_ref(codes, luts, nbrs))
+    ref = np.where(ref >= pq_ref.BIG, np.inf, ref)
+    out = np.asarray(pq_ops.pq_adc_gather(codes, luts, nbrs))
+    assert np.isinf(out[1]).all()
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    # bf16 LUT storage: same gather, entries rounded -- stays within the
+    # table's rounding error (~3 significant digits) of the f32 result
+    out_bf = np.asarray(pq_ops.pq_adc_gather(
+        codes, luts.astype(jnp.bfloat16), nbrs))
+    assert np.isinf(out_bf[1]).all()
+    fin = np.isfinite(ref)
+    np.testing.assert_allclose(out_bf[fin], ref[fin], rtol=2e-2)
+
+
+def test_pq_adc_gather_all_padded():
+    """Every lane padded: the scalar-prefetch index_map must clamp the -1
+    ids (no OOB row DMA) and the output is all +inf."""
+    from repro.kernels.pq_adc import ops as pq_ops
+    from repro.quant import encode, train_pq
+    from repro.quant.adc import build_luts
+    rng = np.random.default_rng(32)
+    n, d, b, m0 = 128, 8, 4, 6
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    cb = train_pq(vecs, m=4, nbits=6, iters=3, seed=1)
+    codes = jnp.asarray(encode(cb, vecs))
+    qs = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    luts = build_luts(jnp.asarray(cb.centroids), qs)
+    nbrs = jnp.full((b, m0), -1, jnp.int32)
+    out = np.asarray(pq_ops.pq_adc_gather(codes, luts, nbrs))
+    assert out.shape == (b, m0)
+    assert np.isinf(out).all()
+
+
 # ---------------------------------------------------------------------------
 # embedding_bag
 # ---------------------------------------------------------------------------

@@ -221,6 +221,84 @@ def test_sq_lossless_codes_bit_identical(pq_corpus):
     np.testing.assert_array_equal(r_f32.dists, r_sq.dists)
 
 
+def test_pq_bf16_lut_tolerance():
+    """bf16 LUT storage halves the per-query table and only perturbs
+    distances by the table's rounding error -- not the PQ quantization
+    error, which is an order of magnitude larger."""
+    g, vecs, rng = _quant_g()
+    qs = jnp.asarray(rng.normal(size=(4, vecs.shape[1])).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, vecs.shape[0], size=(4, 16),
+                                   dtype=np.int32))
+    lo = PqAdcScorer(lut_bf16=True)
+    hi = PqAdcScorer(lut_bf16=False)
+    st_lo = lo.prepare(g, qs, _progs(4))
+    st_hi = hi.prepare(g, qs, _progs(4))
+    assert st_lo["luts"].dtype == jnp.bfloat16
+    assert st_hi["luts"].dtype == jnp.float32
+    assert lo.lut_bytes(g, 4) * 2 == hi.lut_bytes(g, 4)
+    d_lo = np.asarray(lo.score_block(g, st_lo, ids))
+    d_hi = np.asarray(hi.score_block(g, st_hi, ids))
+    np.testing.assert_allclose(d_lo, d_hi, rtol=2e-2)
+    assert np.mean(np.abs(d_lo - d_hi) / (d_hi + 1e-6)) < 5e-3
+
+
+def test_sq_score_block_bit_stable_across_batch_width():
+    """Lane compaction re-invokes the scorer at every stage width, so a
+    lane's distances must not depend on how many other lanes ride along --
+    the folded-affine SQ path keeps its contractions batch-independent."""
+    g, vecs, rng = _quant_g()
+    sc = SqScorer()
+    gs = _g_for(g, sc)
+    qs = jnp.asarray(rng.normal(size=(8, vecs.shape[1])).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, vecs.shape[0], size=(8, 16),
+                                   dtype=np.int32))
+    full_state = sc.prepare(gs, qs, _progs(8))
+    full = np.asarray(sc.score_block(gs, full_state, ids))
+    for width in (1, 2, 4):
+        for off in range(0, 8, width):
+            sl = slice(off, off + width)
+            st = sc.prepare(gs, qs[sl], _progs(width))
+            part = np.asarray(sc.score_block(gs, st, ids[sl]))
+            np.testing.assert_array_equal(part, full[sl])
+
+
+def test_sq_graph_route_matches_singles_under_compaction(pq_corpus):
+    """Regression for the compaction ladder slicing scorer state: SqScorer's
+    query-independent w2 weights are declared shared_state and must survive
+    lane packing -- a batched run equals 24 independent single-query runs
+    bit for bit."""
+    fi, vecs, attrs, queries = pq_corpus
+    fi_sq = FavorIndex(fi.index, attrs, BuildSpec(quant=QuantSpec(kind="sq")))
+    be = LocalBackend(fi_sq)
+    flt = paper_filters(SCHEMA)["equality_bool"]
+    opts = SearchOptions(k=10, ef=48, force="graph", graph_quant="sq")
+    batched = router.execute(be, queries[:6], flt, opts)
+    for i in range(6):
+        single = router.execute(be, queries[i:i + 1], flt, opts)
+        np.testing.assert_array_equal(single.ids[0], batched.ids[i])
+        np.testing.assert_array_equal(single.dists[0], batched.dists[i])
+
+
+def test_max_steps_budget(pq_corpus):
+    """SearchOptions.max_steps bounds total traversal waves across the
+    compaction ladder; capped lanes still return a valid result pool."""
+    fi, vecs, attrs, queries = pq_corpus
+    be = LocalBackend(fi)
+    flt = paper_filters(SCHEMA)["equality_bool"]
+    free = router.execute(be, queries, flt,
+                          SearchOptions(k=10, ef=96, force="graph",
+                                        graph_quant="pq"))
+    cap = int(np.max(free.waves)) // 2
+    capped = router.execute(be, queries, flt,
+                            SearchOptions(k=10, ef=96, force="graph",
+                                          graph_quant="pq", max_steps=cap))
+    assert int(np.max(capped.waves)) <= cap
+    assert (capped.ids >= 0).any(axis=1).all()   # every lane returned hits
+    assert np.isfinite(capped.dists[capped.ids >= 0]).all()
+    with pytest.raises(ValueError):
+        SearchOptions(max_steps=-1)
+
+
 def test_graph_quant_padded_parity(pq_corpus):
     """Bucket padding stays bit-identical under the quantized scorer."""
     from repro.core import BatchSpec
