@@ -23,6 +23,14 @@ tombstone masking) is tracked across PRs, plus a device-parallel bulk-build
 vs numpy-loop build comparison (wall time and recall@10, asserted within
 1pt in smoke mode).  Lands in the ``mutation`` section of BENCH_serve.json.
 
+The **concurrency scenario**: two-tenant Poisson traffic through the
+pipelined front-end (``parallel_steps`` 1 vs 2, bit-identity across arms,
+QPS ratio -- the >=1.25x bar applies on multi-core hosts; a 1-core
+container timeshares host and device work, so the arms tie there) plus
+the live-index merge arms (steady-state vs background-merge vs
+inline-merge per-step p99, run as two identical lifecycle cycles so the
+measured cycle is compile-free).  Lands in the ``concurrency`` section.
+
 The **observability scenario** closes the file: the same mixed-selectivity
 stream with the obs layer off vs on at default sampling (best-of-repeats
 QPS, row-identical parity) plus a max-rate probe arm populating the
@@ -42,6 +50,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import os
 import time
 
 import jax
@@ -54,8 +63,8 @@ from repro.core import filters as F
 from repro.core.distributed import largest_divisor
 from repro.data import synthetic
 from repro.index.bulk import build_hnsw_bulk
-from repro.serving import (FrontEnd, FrontEndSpec, Overloaded, ServeEngine,
-                           TenantSpec)
+from repro.serving import (FrontEnd, FrontEndSpec, MergeController,
+                           Overloaded, ServeEngine, TenantSpec)
 
 from .common import DIM, N, NQ, SEED, Csv, update_bench_json
 
@@ -326,6 +335,209 @@ def _assert_frontend_smoke(fr: dict) -> None:
     assert on["cold_p99_ms"] <= off["cold_p99_ms"], (on, off)
 
 
+def _concurrency(make_backend, opts, schema, dim, attrs, *,
+                 smoke: bool) -> dict:
+    """Pipelined step dispatch + background incremental merge under load.
+
+    **Pipeline arm** -- two tenants submit Poisson traffic through the
+    async front-end with a short coalesce hold.  ``parallel_steps=1``
+    resolves every step before the next dispatch, so hold window, host
+    phase and device wait all serialize; ``parallel_steps=2`` keeps one
+    step's device phase in flight while the scheduler holds/builds the
+    next batch.  Best-of-repeats QPS per arm, plus a per-request
+    bit-identity check across arms (batch composition differs between
+    them -- bucket padding makes results batch-invariant).
+
+    **Merge arm** -- per-step latency on a live index holding a ~10%
+    unmerged delta, in three phases on comparable engines: steady (delta
+    live, no compaction running), background (a small-wave
+    ``MergeController`` folds the delta off-thread while steps keep
+    serving; only the epoch-guarded commit swap runs under the engine
+    lock), and foreground (the same delta compacted inline by the step
+    that crosses ``merge_delta_frac`` -- the whole build lands in that
+    request's latency, the contrast case).  Every build/serve executable
+    is compiled in a rehearsal pass (upserts matched by deletes keep the
+    row count constant, so post-merge shapes repeat exactly).
+    """
+    n_req = 64 if smoke else 160
+    reqs = _workload(schema, dim, n_req, seed=53)
+    gaps = np.random.default_rng(59).exponential(0.002, n_req)
+    arrive = np.cumsum(gaps)
+    pipe_backend = make_backend()
+
+    async def drive(slots: int):
+        eng = ServeEngine(pipe_backend, opts, max_batch=8)
+        eng.warmup()
+        fe = FrontEnd(eng, FrontEndSpec(parallel_steps=slots,
+                                        coalesce_ms=2.0, coalesce_target=8))
+        tasks = []
+        t0 = time.perf_counter()
+        for i, (q, flt) in enumerate(reqs):
+            lag = arrive[i] - (time.perf_counter() - t0)
+            if lag > 0:
+                await asyncio.sleep(lag)
+            tasks.append(asyncio.create_task(
+                fe.submit(q, flt, tenant=("a", "b")[i % 2])))
+        outs = await asyncio.gather(*tasks)
+        wall = time.perf_counter() - t0
+        st = fe.stats
+        await fe.close()
+        return outs, st, wall
+
+    def best_of(slots: int, repeats: int = 3):
+        outs, st, qps = None, None, 0.0
+        for _ in range(repeats):
+            o, s, w = asyncio.run(drive(slots))
+            if len(o) / w > qps:
+                outs, st, qps = o, s, len(o) / w
+        return outs, st, qps
+
+    outs_s, st_s, qps_s = best_of(1)
+    outs_p, st_p, qps_p = best_of(2)
+    pipe = {
+        "requests": n_req,
+        # wall-clock overlap needs host and device work on separate cores:
+        # on a 1-core container they timeshare and the arms tie, so the
+        # >=1.25x smoke bar only applies at cores >= 2 (the CI runner)
+        "cores": os.cpu_count() or 1,
+        "serialized": {"qps": qps_s,
+                       "dispatches": st_s["coalesce"]["dispatches"],
+                       "mean_batch": st_s["coalesce"]["mean_batch"]},
+        "pipelined": {"qps": qps_p, "slots": st_p["coalesce"]["slots"],
+                      "dispatches": st_p["coalesce"]["dispatches"],
+                      "mean_batch": st_p["coalesce"]["mean_batch"]},
+        "qps_ratio": qps_p / max(qps_s, 1e-12),
+        "mismatch_frac": float(np.mean(
+            [not np.array_equal(a.ids, b.ids)
+             for a, b in zip(outs_s, outs_p)])),
+    }
+
+    # -- merge arm ----------------------------------------------------------
+    m_reqs = _workload(schema, dim, 48 if smoke else 96, seed=61)
+    rng = np.random.default_rng(67)
+    n_attr = attrs.ints.shape[0]
+
+    def churn(eng, count):
+        """Upsert ``count`` rows and retire ``count`` old ids, so the merged
+        index keeps the base row count (and every executable shape)."""
+        rows = rng.integers(0, n_attr, count)
+        vecs = rng.normal(size=(count, dim)).astype(np.float32)
+        ids = eng.upsert(vecs, attrs.ints[rows], attrs.floats[rows])
+        base_n = int(ids[0])              # first delta id == base row count
+        eng.delete(list(range(max(base_n - count, 0), base_n)))
+
+    def step_once(eng, k):
+        """One single-request step with a think gap wider than one build
+        burst: the edge-paced controller launches its next wave the moment
+        a step finishes, so the burst completes inside this gap."""
+        time.sleep(0.03)
+        q, flt = m_reqs[k % len(m_reqs)]
+        eng.submit(q, flt)
+        active = eng._m_merge_active.value() > 0.0
+        t0 = time.perf_counter()
+        eng.step(force=True)
+        return (time.perf_counter() - t0) * 1e3, (
+            active or eng._m_merge_active.value() > 0.0)
+
+    p99 = lambda xs: float(np.percentile(np.asarray(xs), 99))  # noqa: E731
+
+    def background_cycle():
+        """One full lifecycle on a fresh backend: churn up a ~10% delta,
+        steady-state serve, then serve on while the controller folds the
+        delta off-thread.  Run twice -- a merge grows the row count, so a
+        warmed engine can never replay its own merge shape-for-shape, but
+        a second identical cycle on a fresh backend hits every executable
+        the first cycle compiled (same base, same delta count)."""
+        eng = ServeEngine(make_backend(), opts, max_batch=8,
+                          merge_background=True)
+        eng._merge_ctl.stop()
+        # small waves + fast poll so the build spans many steps; a generous
+        # max_yield_s lets the edge-triggered pacing wait out a full step
+        # and launch each burst at the start of the inter-step gap
+        ctl = MergeController(eng, wave=2, poll_s=0.002, max_yield_s=0.2)
+        eng._merge_ctl = ctl
+        eng.warmup()
+        n_base = eng.stats["mutations"]["base_rows"]
+        delta = max(16, int(round(0.10 * n_base)))
+        churn(eng, delta)
+        for k in range(len(m_reqs)):      # warm the delta-live serve path
+            step_once(eng, k)
+        eng.reset_stats()
+        lat_s = [step_once(eng, k)[0] for k in range(len(m_reqs))]
+        eng.merge_delta_frac = 0.05       # next poll/poke starts the build
+        lat_b, act_b = [], []
+        k = 0
+        # merge-count checked right after every step: a post-commit serve
+        # (new row count -> fresh executables) never enters the sample
+        while ctl.merges < 1 and k < 2000:
+            ms, active = step_once(eng, k)
+            lat_b.append(ms)
+            act_b.append(active)
+            k += 1
+        during = [ms for ms, a in zip(lat_b, act_b) if a] or lat_b
+        out = {
+            "delta_rows": delta,
+            "steady": {"p99_ms": p99(lat_s), "steps": len(lat_s)},
+            "background": {
+                "p99_ms": p99(lat_b), "steps": len(lat_b),
+                "during_merge_steps": int(np.sum(act_b)),
+                "during_p99_ms": p99(during),
+                "merges": ctl.merges, "stale_commits": ctl.stale,
+                "merge_s": eng._m_merge_s.sum(),
+                "commit_stall_s": eng._m_merge_stall.sum(),
+                "delta_rows_after": eng.stats["mutations"]["delta_rows"],
+            },
+        }
+        eng.close()
+        return out
+
+    background_cycle()                    # dress rehearsal: compiles land here
+    merge = background_cycle()            # measured: every executable warm
+
+    # foreground contrast: the same delta compacted inline by the step
+    # that crosses the threshold -- the whole build (and its compiles)
+    # lands in that request's latency, which is exactly the point
+    eng_f = ServeEngine(make_backend(), opts, max_batch=8)
+    eng_f.warmup()
+    churn(eng_f, merge["delta_rows"])
+    for k in range(len(m_reqs)):
+        step_once(eng_f, k)
+    eng_f.reset_stats()
+    eng_f.merge_delta_frac = 0.05
+    lat_f = [step_once(eng_f, k)[0] for k in range(len(m_reqs))]
+    st_f = eng_f.stats["mutations"]
+    merge["foreground"] = {
+        "p99_ms": p99(lat_f), "max_ms": float(np.max(lat_f)),
+        "steps": len(lat_f), "merges": st_f["merges"],
+    }
+    merge["p99_vs_steady"] = (merge["background"]["during_p99_ms"]
+                              / max(merge["steady"]["p99_ms"], 1e-12))
+    return {"pipeline": pipe, "merge": merge}
+
+
+def _assert_concurrency_smoke(co: dict) -> None:
+    """CI acceptance for pipelined serving: overlapped dispatch buys real
+    wall-clock (>=1.25x serialized) without changing a single result bit,
+    and a background merge never stalls serving past 2x the steady-state
+    p99 (the foreground arm shows what inline compaction costs instead)."""
+    pipe, mg = co["pipeline"], co["merge"]
+    assert pipe["mismatch_frac"] == 0.0, pipe
+    if pipe["cores"] >= 2:
+        assert pipe["qps_ratio"] >= 1.25, pipe
+    else:
+        # single-core container: host phase, device compute and the
+        # scheduler all timeshare one core, so overlap cannot buy
+        # wall-clock and thread contention adds real (noisy) overhead.
+        # Only guard against pathological collapse here -- the >=1.25x
+        # bar runs on the multi-core CI runner
+        assert pipe["qps_ratio"] >= 0.3, pipe
+    bg = mg["background"]
+    assert bg["merges"] >= 1 and bg["delta_rows_after"] == 0, bg
+    assert bg["during_merge_steps"] >= 1, bg
+    assert bg["during_p99_ms"] <= 2.0 * mg["steady"]["p99_ms"], mg
+    assert mg["foreground"]["merges"] >= 1, mg
+
+
 def _obs_overhead(backend, opts, requests, *, repeats: int) -> dict:
     """Observability cost + probe accuracy on the mixed-selectivity stream.
 
@@ -541,6 +753,16 @@ def run(quick: bool = False, smoke: bool = False) -> str:
     if smoke:
         _assert_frontend_smoke(fr)
 
+    # -- pipelined dispatch + background merge --------------------------------
+    co = _concurrency(lambda: LocalBackend(FavorIndex(bulk_idx, attrs)),
+                      fe_opts, schema, dim, attrs, smoke=smoke)
+    jpath = update_bench_json("concurrency", {
+        "config": {"n": n, "dim": dim, "buckets": list(spec.buckets())},
+        **co,
+    })
+    if smoke:
+        _assert_concurrency_smoke(co)
+
     # -- observability: overhead + estimator/route-confusion probes -----------
     ob = _obs_overhead(local, opts_f32, requests,
                        repeats=3 if quick else 5)
@@ -574,6 +796,11 @@ def run(quick: bool = False, smoke: bool = False) -> str:
               f"hot shed {fr_on['hot']['shed']}/{hot_total} "
               f"cold p99 {fr_on['cold_p99_ms']:.0f}ms"
               f" (fifo {fr_off['cold_p99_ms']:.0f}ms)"
+            + f" | conc: pipeline {co['pipeline']['qps_ratio']:.2f}x "
+              f"merge p99 {co['merge']['steady']['p99_ms']:.1f}->"
+              f"{co['merge']['background']['p99_ms']:.1f}ms bg "
+              f"({co['merge']['foreground']['p99_ms']:.0f}ms inline) "
+              f"stall {co['merge']['background']['commit_stall_s'] * 1e3:.1f}ms"
             + f" | obs: overhead {ob['overhead_frac']:+.1%} "
               f"err {ob['probes']['mean_abs_error']:.3f} "
               f"flips {ob['probes']['route_flips']}/{ob['probes']['count']} "

@@ -40,6 +40,7 @@ hit/miss counters surface through ``cache_stats()``.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 import numpy as np
@@ -97,6 +98,15 @@ class CachingBackend:
                  clock=time.monotonic):
         self.inner = inner
         self.spec = spec or CacheSpec()
+        # every public entry point below is host-side (dict/LRU walks):
+        # one reentrant lock makes lookups, admissions and epoch
+        # invalidation safe under pipelined serving, where cache record
+        # (step k, finish thread) and cache lookup (step k+1, dispatch
+        # thread) would otherwise interleave mid-eviction.  Device work is
+        # never awaited while holding it except on the brute miss path,
+        # which the engine lock already serializes when driven through
+        # ServeEngine.
+        self._lock = threading.RLock()
         self.selectivity_cache = SelectivityCache(self.spec, clock)
         self.candidate_cache = CandidateCache(self.spec, clock)
         self.semantic_cache = SemanticResultCache(self.spec, clock)
@@ -148,10 +158,11 @@ class CachingBackend:
 
     def scope_id(self, name) -> int:
         """Intern a tenant/session name to its dense scope id ("" -> 0)."""
-        s = str(name)
-        if s not in self._scope_ids:
-            self._scope_ids[s] = len(self._scope_ids)
-        return self._scope_ids[s]
+        with self._lock:
+            s = str(name)
+            if s not in self._scope_ids:
+                self._scope_ids[s] = len(self._scope_ids)
+            return self._scope_ids[s]
 
     def __getattr__(self, name):
         # transparent decorator: anything outside the cache surface
@@ -206,11 +217,12 @@ class CachingBackend:
 
     def clear(self) -> None:
         """Drop every cached entry in all three layers (counters survive)."""
-        self.selectivity_cache.clear()
-        self.candidate_cache.clear()
-        self.semantic_cache.clear()
-        self._brute_seen.clear()
-        self._sig_memo = []
+        with self._lock:
+            self.selectivity_cache.clear()
+            self.candidate_cache.clear()
+            self.semantic_cache.clear()
+            self._brute_seen.clear()
+            self._sig_memo = []
 
     def reset_cache_counters(self) -> None:
         """Zero every layer's hit/miss/bypass/eviction counters and the
@@ -218,10 +230,11 @@ class CachingBackend:
         ``ServeEngine.reset_stats()`` calls this through the metrics
         registry's reset cascade (the dual of ``clear()``, which drops
         entries but keeps counters)."""
-        self.selectivity_cache.reset_counters()
-        self.candidate_cache.reset_counters()
-        self.semantic_cache.reset_counters()
-        self.invalidations = 0
+        with self._lock:
+            self.selectivity_cache.reset_counters()
+            self.candidate_cache.reset_counters()
+            self.semantic_cache.reset_counters()
+            self.invalidations = 0
 
     def _signatures(self, programs: dict) -> list[str]:
         """Per-query canonical signatures, memoized on array identity."""
@@ -242,6 +255,10 @@ class CachingBackend:
                       opts: SearchOptions):
         """Optional router hook: per-query semantic hits for the batch, or
         None when the layer is disabled / nothing hit."""
+        with self._lock:
+            return self._lookup_result(queries, programs, opts)
+
+    def _lookup_result(self, queries, programs, opts):
         self._sync_epoch()
         if not self.semantic_cache.enabled:
             return None
@@ -270,6 +287,12 @@ class CachingBackend:
                       opts: SearchOptions, ids, dists, p_hat,
                       routed_brute) -> None:
         """Optional router hook: store freshly computed per-query results."""
+        with self._lock:
+            self._record_result(queries, programs, opts, ids, dists, p_hat,
+                                routed_brute)
+
+    def _record_result(self, queries, programs, opts, ids, dists, p_hat,
+                       routed_brute):
         if not self.semantic_cache.enabled:
             return
         programs, scopes = _split_scope(programs)
@@ -287,6 +310,10 @@ class CachingBackend:
 
     # -- selectivity layer ----------------------------------------------------
     def estimate(self, programs: dict, valid=None):
+        with self._lock:
+            return self._estimate(programs, valid)
+
+    def _estimate(self, programs, valid=None):
         self._sync_epoch()
         # the selectivity layer is scope-blind (p_hat is data, not tenant);
         # the sidecar is stripped so inner compiled calls never see it
@@ -326,8 +353,10 @@ class CachingBackend:
     # -- graph route: pass-through --------------------------------------------
     def search_graph(self, queries, programs: dict, p_hat,
                      opts: SearchOptions, valid=None) -> dict:
-        self._sync_epoch()
-        programs, _ = _split_scope(programs)
+        with self._lock:
+            self._sync_epoch()
+            programs, _ = _split_scope(programs)
+        # pass-through dispatch needs no cache state: drop the lock first
         return self.inner.search_graph(queries, programs, p_hat, opts,
                                        valid=valid)
 
@@ -405,6 +434,10 @@ class CachingBackend:
 
     def search_brute(self, queries, programs: dict, opts: SearchOptions,
                      valid=None):
+        with self._lock:
+            return self._search_brute(queries, programs, opts, valid)
+
+    def _search_brute(self, queries, programs, opts, valid=None):
         self._sync_epoch()
         programs, scopes = _split_scope(programs)
         b = int(queries.shape[0])
@@ -499,6 +532,10 @@ class CachingBackend:
     # -- accounting -----------------------------------------------------------
     def cache_stats(self) -> dict:
         """Per-layer hit/miss/bypass counters (surfaced by ServeEngine)."""
+        with self._lock:
+            return self._cache_stats()
+
+    def _cache_stats(self) -> dict:
         out = {
             "selectivity": self.selectivity_cache.stats(),
             "candidates": self.candidate_cache.stats(),

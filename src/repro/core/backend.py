@@ -32,6 +32,7 @@ three methods and plug into ``ServeEngine`` unchanged.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import TYPE_CHECKING, Protocol, runtime_checkable
 
 import jax.numpy as jnp
@@ -46,12 +47,33 @@ from .search import favor_graph_search
 # gated host-side profiler scopes (nullcontext unless ObsSpec enables
 # kernel annotations); repro.obs.profiling imports nothing from core
 from ..obs.profiling import annotate as _annotate
-from ..index.delta import compose_topk
+from ..index.delta import compose_topk_dev
 from ..index.epochs import ComponentEpochs
 from ..index.live import LiveState
 
 if TYPE_CHECKING:
     from .favor import FavorIndex
+
+
+@dataclass
+class _ShardMergePrep:
+    """Off-thread-prepared sharded merge, ready for an atomic commit.
+    ``kind`` is "incr" (grow the last shard in place) or "full" (fresh
+    build_sharded with headroom); ``graph_epoch`` guards staleness."""
+    kind: str
+    from_slot: int
+    n_live: int
+    graph_epoch: int
+    base_n: int
+    shard: int = -1
+    index: object = None       # incr: the grown last-shard HnswIndex
+    vectors: object = None     # incr: snapshot delta rows
+    ints: object = None
+    floats: object = None
+    codes: object = None
+    sharded: object = None     # full: the rebuilt ShardedFavorArrays
+    parts: object = None       # full: per-shard index handles
+    n_tot: int = -1
 
 
 @runtime_checkable
@@ -154,6 +176,16 @@ class LocalBackend:
     def merge(self, *, wave: int = 512) -> dict:
         return self.index.merge(wave=wave)
 
+    def merge_prepare(self, *, wave: int = 512, on_wave=None):
+        """Background-merge phase 1 (no served-state mutation); see
+        FavorIndex.merge_prepare."""
+        return self.index.merge_prepare(wave=wave, on_wave=on_wave)
+
+    def merge_commit(self, prep):
+        """Background-merge phase 2 (cheap atomic swap); see
+        FavorIndex.merge_commit."""
+        return self.index.merge_commit(prep)
+
     def live_view(self):
         return self.index.live_view()
 
@@ -199,9 +231,11 @@ class LocalBackend:
         delta = self._delta()
         if delta is None:
             return base
-        gi, gd = delta.scan(queries, programs, k=opts.k, valid=valid)
-        ci, cd = compose_topk(np.asarray(base["ids"]),
-                              np.asarray(base["dists"]), gi, gd, opts.k)
+        # device-side compose: the fold stays on the async-dispatch path (no
+        # host sync mid-step); bit-identical to the host sort-merge (stable
+        # argsort, base-first concat)
+        gi, gd = delta.scan_dev(queries, programs, k=opts.k, valid=valid)
+        ci, cd = compose_topk_dev(base["ids"], base["dists"], gi, gd, opts.k)
         out = dict(base)
         out["ids"], out["dists"] = ci, cd
         return out
@@ -244,9 +278,8 @@ class LocalBackend:
             return ids, dists
         # delta rows are scanned exact f32 even under use_pq: the buffer is
         # tiny, so exactness is free and only sharpens the compressed route
-        gi, gd = delta.scan(queries, programs, k=opts.k, valid=valid)
-        return compose_topk(np.asarray(ids), np.asarray(dists), gi, gd,
-                            opts.k)
+        gi, gd = delta.scan_dev(queries, programs, k=opts.k, valid=valid)
+        return compose_topk_dev(ids, dists, gi, gd, opts.k)
 
     # -- accounting -----------------------------------------------------------
     def bytes_per_hop(self, opts: SearchOptions) -> int:
@@ -273,7 +306,8 @@ class ShardedBackend:
                  schema: F.Schema, *, sel_cfg=None, codebook=None,
                  rerank: int = 4, prefbf_chunk: int = 65536,
                  query_axes=("data",), model_axis: str = "model",
-                 hnsw_params=None, seed: int = 0):
+                 hnsw_params=None, seed: int = 0,
+                 merge_headroom: float = 1.0):
         self.mesh = mesh
         self.schema = schema
         self.sel_cfg = sel_cfg or selector.SelectorConfig()
@@ -301,6 +335,13 @@ class ShardedBackend:
         self.shard_epochs = [0] * sharded.n_shards
         self._live: LiveState | None = None
         self._live_active = False   # db carries an "alive" array
+        # incremental-merge state: the per-shard HnswIndex handles (kept by
+        # build()/full merges) and the headroom fraction -- a full-rebuild
+        # merge reserves ~merge_headroom x the merged delta as dead tail rows
+        # in the LAST shard, which later merges fill in place by growing just
+        # that shard's graph instead of rebuilding every shard
+        self.merge_headroom = float(merge_headroom)
+        self._shard_indexes: list | None = None
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -325,11 +366,11 @@ class ShardedBackend:
                     f"match the supplied codebook (m={codebook.m}, "
                     f"nbits={codebook.nbits})")
         n_shards = mesh.shape[model_axis]
-        sharded = dist.build_sharded(vectors, attrs, n_shards, spec.hnsw,
-                                     sample_rate=spec.selector.sample_rate,
-                                     seed=seed,
-                                     min_sample=spec.selector.min_sample,
-                                     max_sample=spec.selector.max_sample)
+        sharded, parts = dist.build_sharded(
+            vectors, attrs, n_shards, spec.hnsw,
+            sample_rate=spec.selector.sample_rate, seed=seed,
+            min_sample=spec.selector.min_sample,
+            max_sample=spec.selector.max_sample, keep_parts=True)
         rerank = 4
         if codebook is None and spec.quant is not None:
             from .. import quant
@@ -342,11 +383,13 @@ class ShardedBackend:
                 codebook = quant.train_sq(vectors)
         if spec.quant is not None:
             rerank = spec.quant.rerank
-        return cls(mesh, sharded, attrs.schema, sel_cfg=spec.selector,
-                   codebook=codebook, rerank=rerank,
-                   prefbf_chunk=max(spec.prefbf_chunk, 1),
-                   query_axes=query_axes, model_axis=model_axis,
-                   hnsw_params=spec.hnsw, seed=seed)
+        be = cls(mesh, sharded, attrs.schema, sel_cfg=spec.selector,
+                 codebook=codebook, rerank=rerank,
+                 prefbf_chunk=max(spec.prefbf_chunk, 1),
+                 query_axes=query_axes, model_axis=model_axis,
+                 hnsw_params=spec.hnsw, seed=seed)
+        be._shard_indexes = parts
+        return be
 
     # -- serve executables ----------------------------------------------------
     def _fns(self, opts: SearchOptions, *, for_pq: bool = False) -> dict:
@@ -424,9 +467,15 @@ class ShardedBackend:
     def _put_alive(self, alive: np.ndarray) -> None:
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
+        alive = np.asarray(alive, bool)
+        cap = self.sharded.arrays["vectors"].shape[0]
+        if alive.shape[0] < cap:
+            # headroom tail rows (reserved by a full-rebuild merge) are dead
+            # until an incremental merge registers real rows onto them
+            alive = np.concatenate(
+                [alive, np.zeros((cap - alive.shape[0],), bool)])
         self.db["alive"] = jax.device_put(
-            np.asarray(alive, bool),
-            NamedSharding(self.mesh, P(self.model_axis)))
+            alive, NamedSharding(self.mesh, P(self.model_axis)))
 
     def _apply_tombstones(self, dead_rows: np.ndarray) -> None:
         if len(dead_rows) == 0:
@@ -469,66 +518,221 @@ class ShardedBackend:
                     "missing_deletes": 0}
         return self._live.stats()
 
-    def merge(self, *, wave: int = 512) -> dict:
-        """Fold the delta into the base: concatenate every delta slot after
-        the base rows (dead slots ride along tombstoned, keeping ids
-        positional), pad to a multiple of the shard count with permanently
-        dead rows, and rebuild the per-shard HNSWs through the bulk-build
-        wave pipeline.  All three epochs move -- the selectivity sample is
-        re-drawn over the new sharding, unlike the local merge."""
-        from ..index.bulk import build_hnsw_bulk
+    def _pick_capacity(self, n_tot: int, cnt: int) -> int:
+        """Array capacity for a full-rebuild merge: shard-aligned, with up
+        to ``merge_headroom * cnt`` extra dead-tail rows -- but never so many
+        that the tail spills out of the LAST shard (the invariant that lets
+        an incremental merge grow exactly one shard)."""
+        s = self.sharded.n_shards
+
+        def align(x):
+            return -(-x // s) * s
+
+        cap = align(n_tot)
+        want = align(n_tot + max(0, int(self.merge_headroom * cnt)))
+        while cap < want and (cap + s - n_tot) < (cap + s) // s:
+            cap += s
+        return cap
+
+    def merge_prepare(self, *, wave: int = 512, on_wave=None):
+        """Phase 1 of a sharded merge, safe to run off-thread (nothing
+        served is mutated).  Two shapes:
+
+        * incremental -- the delta fits in the headroom tail reserved by the
+          last full rebuild AND the per-shard index handles are held: grow
+          only the last shard's HNSW via ``bulk_add`` (positions
+          [base_n, base_n+cnt) are that shard's unclaimed rows, so global
+          ids stay positional without touching any other shard);
+        * full -- rebuild every shard through ``build_sharded`` over the
+          logical rows, reserving fresh headroom for future increments.
+
+        Returns None when there is nothing to merge; pass the result to
+        ``merge_commit`` under the serving lock.
+        """
+        from ..index.bulk import build_hnsw_bulk, bulk_add
         live = self._live
-        a = self.sharded.arrays
         if live is None or live.delta.count == 0:
-            return {"merged_slots": 0, "merged_live": 0,
-                    "n": a["vectors"].shape[0]}
+            return None
         if self.quant is not None and self.codebook is None:
             raise ValueError("cannot merge: codes were pre-attached without "
                              "a codebook to re-encode the grown DB with")
         d = live.delta
-        cnt, n_live = d.count, d.live_count
-        vectors = np.concatenate([a["vectors"], d.vectors[:cnt]])
-        ints = np.concatenate([a["attrs_int"], d.ints[:cnt]])
-        floats = np.concatenate([a["attrs_float"], d.floats[:cnt]])
-        alive = live.merged_alive()
-        n_shards = self.sharded.n_shards
-        pad = (-vectors.shape[0]) % n_shards
+        cnt = int(d.count)      # snapshot boundary: read BEFORE array refs
+        vecs = d.vectors[:cnt].copy()
+        ints = d.ints[:cnt].copy()
+        flts = d.floats[:cnt].copy()
+        link = d.alive[:cnt].copy()
+        graph_epoch = self.epochs.graph
+        base_n = int(live.base_n)
+        sharded = self.sharded
+        a = sharded.arrays
+        cap = a["vectors"].shape[0]
+        s_last = sharded.n_shards - 1
+        if (self._shard_indexes is not None and base_n + cnt <= cap
+                and self._shard_indexes[s_last].n
+                == base_n - s_last * sharded.shard_rows):
+            new_idx = bulk_add(self._shard_indexes[s_last], vecs, wave=wave,
+                               link=link, on_wave=on_wave)
+            codes = None
+            if self.codebook is not None:
+                from .. import quant
+                codes = quant.encode(self.codebook, vecs)
+            return _ShardMergePrep(
+                kind="incr", from_slot=cnt, n_live=int(link.sum()),
+                graph_epoch=graph_epoch, base_n=base_n, shard=s_last,
+                index=new_idx, vectors=vecs, ints=ints, floats=flts,
+                codes=codes)
+
+        n_tot = base_n + cnt
+        vectors = np.concatenate([a["vectors"][:base_n], vecs])
+        ints_all = np.concatenate([a["attrs_int"][:base_n], ints])
+        flts_all = np.concatenate([a["attrs_float"][:base_n], flts])
+        cap_new = self._pick_capacity(n_tot, cnt)
+        pad = cap_new - n_tot
         if pad:
-            # shard-alignment rows: zero attrs (NOT the -1/nan padded-row
-            # fill -- the re-drawn estimator sample may include them, and
-            # attr=-1 would shift out of the imask range) and alive=False
-            # forever
+            # alignment + headroom rows: zero attrs (NOT the -1/nan
+            # padded-row fill -- attr=-1 would shift out of the imask range)
+            # and alive=False until an incremental merge claims them
             vectors = np.concatenate(
                 [vectors, np.zeros((pad, vectors.shape[1]), np.float32)])
-            ints = np.concatenate(
-                [ints, np.zeros((pad, ints.shape[1]), np.int32)])
-            floats = np.concatenate(
-                [floats, np.zeros((pad, floats.shape[1]), np.float32)])
-            alive = np.concatenate([alive, np.zeros((pad,), bool)])
-        attrs = F.AttributeTable(self.schema, ints, floats)
-        sharded = dist.build_sharded(
-            vectors, attrs, n_shards, self.hnsw_params,
+            ints_all = np.concatenate(
+                [ints_all, np.zeros((pad, ints_all.shape[1]), np.int32)])
+            flts_all = np.concatenate(
+                [flts_all, np.zeros((pad, flts_all.shape[1]), np.float32)])
+        attrs = F.AttributeTable(self.schema, ints_all, flts_all)
+        new_sharded, parts = dist.build_sharded(
+            vectors, attrs, sharded.n_shards, self.hnsw_params,
             sample_rate=self.sel_cfg.sample_rate, seed=self.seed,
             min_sample=self.sel_cfg.min_sample,
             max_sample=self.sel_cfg.max_sample,
-            build_fn=lambda v, p: build_hnsw_bulk(v, p, wave=wave))
+            build_fn=lambda v, p: build_hnsw_bulk(v, p, wave=wave,
+                                                  on_wave=on_wave),
+            n_valid=n_tot, keep_parts=True)
         if self.codebook is not None:
-            sharded = dist.attach_quant(sharded, self.codebook)
+            new_sharded = dist.attach_quant(new_sharded, self.codebook)
+        return _ShardMergePrep(
+            kind="full", from_slot=cnt, n_live=int(link.sum()),
+            graph_epoch=graph_epoch, base_n=base_n, sharded=new_sharded,
+            parts=parts, n_tot=n_tot)
+
+    def merge_commit(self, prep) -> dict | None:
+        """Phase 2: atomic swap under the caller's serving lock.  Mutations
+        since the snapshot are honored exactly like the local backend:
+        current tombstones win, and delta slots past the snapshot boundary
+        carry into the fresh delta with their ids intact.  Returns None --
+        and changes nothing -- when the base graph moved since the snapshot
+        (competing merge / explicit rebuild): the prep is stale."""
+        live = self._live
+        if live is None or self.epochs.graph != prep.graph_epoch:
+            return None
+        cnt = prep.from_slot
+        base = (live.base_alive if live.base_alive is not None
+                else np.ones((live.base_n,), bool))
+        alive = np.concatenate([base, live.delta.alive[:cnt]])
+        if prep.kind == "incr":
+            out = self._commit_incremental(prep, alive)
+        else:
+            out = self._commit_full(prep, alive)
+        live.reset_after_merge(out["n"], None if alive.all() else alive,
+                               from_slot=cnt)
+        return out
+
+    def _commit_full(self, prep, alive: np.ndarray) -> dict:
+        sharded = prep.sharded
         self.sharded = sharded
         self.quant = sharded.quant
-        self._live_active = bool(not alive.all())
+        self._shard_indexes = prep.parts
+        cap = sharded.arrays["vectors"].shape[0]
+        self._live_active = bool(cap > prep.n_tot or not alive.all())
         self._fns_cache.clear()
         self.db = dist.device_put_sharded_db(
             sharded.arrays, self.mesh,
             dist.db_specs(self.model_axis, self.quant))
         if self._live_active:
             self._put_alive(alive)
+        # all three epochs move: the selectivity sample is re-drawn over the
+        # new sharding, unlike the local merge
         self.epochs.bump("vectors", "attributes", "graph")
         self.shard_epochs = [e + 1 for e in self.shard_epochs]
-        live.reset_after_merge(vectors.shape[0],
-                               None if alive.all() else alive)
-        return {"merged_slots": cnt, "merged_live": n_live,
-                "n": vectors.shape[0]}
+        return {"merged_slots": prep.from_slot, "merged_live": prep.n_live,
+                "n": prep.n_tot, "incremental": False}
+
+    def _commit_incremental(self, prep, alive: np.ndarray) -> dict:
+        old = self.sharded
+        a = dict(old.arrays)
+        R = old.shard_rows
+        cap = a["vectors"].shape[0]
+        s = prep.shard
+        idx = prep.index
+        cnt = prep.from_slot
+        nl = prep.base_n + cnt
+        # copy-on-swap: in-flight device phases keep reading the old arrays;
+        # the new dict becomes visible only through the atomic assignments
+        # below (all under the caller's serving lock)
+        rows = slice(prep.base_n, nl)
+        vectors = a["vectors"].copy()
+        vectors[rows] = prep.vectors
+        norms = a["norms"].copy()
+        norms[rows] = np.einsum("nd,nd->n", prep.vectors, prep.vectors)
+        attrs_i = a["attrs_int"].copy()
+        attrs_i[rows] = prep.ints
+        attrs_f = a["attrs_float"].copy()
+        attrs_f[rows] = prep.floats
+        nb0 = a["neighbors0"].copy()
+        nb0[s * R: s * R + idx.n] = idx.levels[0]
+        lup = len(idx.levels) - 1
+        upper = a["upper"]
+        if lup > upper.shape[0]:
+            upper = np.concatenate([
+                upper, np.full((lup - upper.shape[0], cap, upper.shape[2]),
+                               -1, np.int32)], axis=0)
+        else:
+            upper = upper.copy()
+        upper[:, s * R:(s + 1) * R, :] = -1   # links may have been rewired
+        for li, lvl in enumerate(idx.levels[1:]):
+            upper[li, s * R: s * R + idx.n] = lvl
+        entry = a["entry"].copy()
+        entry[s] = idx.entry_point
+        delta_d = a["delta_d"].copy()
+        delta_d[s] = idx.delta_d
+        a.update(vectors=vectors, norms=norms, attrs_int=attrs_i,
+                 attrs_float=attrs_f, neighbors0=nb0, upper=upper,
+                 entry=entry, delta_d=delta_d)
+        if prep.codes is not None:
+            codes = a["codes"].copy()
+            codes[rows] = prep.codes
+            a["codes"] = codes
+        self.sharded = dist.ShardedFavorArrays(a, old.n_shards, R,
+                                               old.sample_rows, old.quant)
+        self._shard_indexes = list(self._shard_indexes)
+        self._shard_indexes[s] = idx
+        if not self._live_active:
+            self._live_active = True
+            self._fns_cache.clear()
+        self.db = dist.device_put_sharded_db(
+            a, self.mesh, dist.db_specs(self.model_axis, self.quant))
+        self._put_alive(alive)
+        # the selectivity sample is untouched (no attributes bump) and only
+        # the grown shard's subgraph moved
+        self.epochs.bump("vectors", "graph")
+        self.shard_epochs[s] += 1
+        return {"merged_slots": cnt, "merged_live": prep.n_live,
+                "n": nl, "incremental": True}
+
+    def merge(self, *, wave: int = 512) -> dict:
+        """Fold the delta into the base.  Implemented as ``merge_prepare``
+        + ``merge_commit`` (background callers split the phases across
+        threads); the first merge after a full rebuild reserves headroom so
+        later merges grow only the last shard (see merge_prepare)."""
+        prep = self.merge_prepare(wave=wave)
+        if prep is None:
+            n = (self._live.base_n if self._live is not None
+                 else self.sharded.arrays["vectors"].shape[0])
+            return {"merged_slots": 0, "merged_live": 0, "n": n}
+        out = self.merge_commit(prep)
+        if out is None:  # pragma: no cover - single-threaded epochs are stable
+            raise RuntimeError("merge_commit rejected a same-thread prepare")
+        return out
 
     @property
     def dim(self) -> int:
@@ -568,13 +772,14 @@ class ShardedBackend:
         with _annotate("favor/sharded/graph_search"):
             ids, dists = self._fns(opts)["serve_graph_phat"](
                 self.db, queries, programs, p_hat, valid)
-        ids, dists = np.asarray(ids)[:b], np.asarray(dists)[:b]
+        ids, dists = ids[:b], dists[:b]
         delta = self._delta()
         if delta is not None:
             # delta rows are host-replicated -- scan them unsharded on the
-            # original (un-padded) batch and fold into the merged top-k
-            gi, gd = delta.scan(q0, programs0, k=opts.k, valid=valid0)
-            ids, dists = compose_topk(ids, dists, gi, gd, opts.k)
+            # original (un-padded) batch and fold into the merged top-k,
+            # staying on device so the step keeps its async dispatch
+            gi, gd = delta.scan_dev(q0, programs0, k=opts.k, valid=valid0)
+            ids, dists = compose_topk_dev(ids, dists, gi, gd, opts.k)
         return {"ids": ids, "dists": dists}
 
     def search_brute(self, queries, programs: dict, opts: SearchOptions,
@@ -585,11 +790,11 @@ class ShardedBackend:
         fns = self._fns(opts, for_pq=opts.use_pq)
         with _annotate(f"favor/sharded/{fn}"):
             ids, dists = fns[fn](self.db, queries, programs, valid)
-        ids, dists = np.asarray(ids)[:b], np.asarray(dists)[:b]
+        ids, dists = ids[:b], dists[:b]
         delta = self._delta()
         if delta is not None:
-            gi, gd = delta.scan(q0, programs0, k=opts.k, valid=valid0)
-            ids, dists = compose_topk(ids, dists, gi, gd, opts.k)
+            gi, gd = delta.scan_dev(q0, programs0, k=opts.k, valid=valid0)
+            ids, dists = compose_topk_dev(ids, dists, gi, gd, opts.k)
         return ids, dists
 
     # -- accounting -----------------------------------------------------------

@@ -120,7 +120,8 @@ def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
                   params: HnswParams | None = None, sample_rate: float = 0.01,
                   seed: int = 0, min_sample: int = 8,
                   max_sample: int = 65536,
-                  build_fn=None) -> ShardedFavorArrays:
+                  build_fn=None, n_valid: int | None = None,
+                  keep_parts: bool = False):
     """Partition rows round-robin-contiguously, build one HNSW per shard.
 
     ``min_sample``/``max_sample`` bound the TOTAL selectivity-sample size
@@ -131,20 +132,35 @@ def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
 
     ``build_fn(vectors, params) -> HnswIndex`` overrides the per-shard build
     (default sequential ``build_hnsw``; pass ``index.bulk.build_hnsw_bulk``
-    for the device-parallel wave pipeline)."""
+    for the device-parallel wave pipeline).
+
+    ``n_valid`` marks rows >= n_valid as permanently-dead headroom: they are
+    excluded from the per-shard graph build (their neighbor rows stay -1, so
+    a later incremental merge can register real rows onto those positions)
+    and from the selectivity sample.  The headroom convention requires the
+    dead tail to live inside the LAST shard; a fully-dead shard falls back
+    to the legacy zero-vector build so its entry/delta_d stay defined.
+
+    ``keep_parts=True`` additionally returns the per-shard HnswIndex objects
+    (the handles an incremental merge grows via ``bulk_add``)."""
     n = vectors.shape[0]
     assert n % n_shards == 0, "row count must divide the model axis"
     build_fn = build_fn or build_hnsw
     ns = n // n_shards
+    n_valid = n if n_valid is None else int(n_valid)
     parts = []
+    lvs = []
     max_lup = 0
     for s in range(n_shards):
         sl = slice(s * ns, (s + 1) * ns)
         p = params or HnswParams()
         p = HnswParams(M=p.M, M0=p.M0, efc=p.efc, ml=p.ml, alpha=p.alpha,
                        heuristic=p.heuristic, seed=p.seed + s)
-        idx = build_fn(vectors[sl], p)
+        lv = min(ns, n_valid - s * ns)
+        lv = ns if lv < 1 else lv
+        idx = build_fn(vectors[sl][:lv], p)
         parts.append((idx, sl))
+        lvs.append(lv)
         max_lup = max(max_lup, len(idx.levels) - 1)
 
     sample_n = max(8, -(-min_sample // n_shards), int(round(ns * sample_rate)))
@@ -160,12 +176,13 @@ def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
     norms = np.einsum("nd,nd->n", vectors, vectors).astype(np.float32)
 
     for s, (idx, sl) in enumerate(parts):
-        neighbors0[sl] = idx.levels[0]
-        for li, lv in enumerate(idx.levels[1:]):
-            upper[li, sl] = lv
+        lo, lv = sl.start, lvs[s]
+        neighbors0[lo:lo + idx.n] = idx.levels[0]
+        for li, lvl in enumerate(idx.levels[1:]):
+            upper[li, lo:lo + idx.n] = lvl
         entry[s] = idx.entry_point
         delta_d[s] = idx.delta_d
-        samp = rng.choice(ns, size=sample_n, replace=sample_n > ns) + s * ns
+        samp = rng.choice(lv, size=sample_n, replace=sample_n > lv) + lo
         s_int[s * sample_n:(s + 1) * sample_n] = attrs.ints[samp]
         s_flt[s * sample_n:(s + 1) * sample_n] = attrs.floats[samp]
 
@@ -176,7 +193,10 @@ def build_sharded(vectors: np.ndarray, attrs: F.AttributeTable, n_shards: int,
         "entry": entry, "delta_d": delta_d,
         "sample_int": s_int, "sample_float": s_flt,
     }
-    return ShardedFavorArrays(arrays, n_shards, ns, sample_n)
+    sharded = ShardedFavorArrays(arrays, n_shards, ns, sample_n)
+    if keep_parts:
+        return sharded, [idx for idx, _ in parts]
+    return sharded
 
 
 def input_specs(n: int, dim: int, m_i: int, m_f: int, n_shards: int, *,

@@ -19,6 +19,7 @@ from __future__ import annotations
 import os
 import time
 import warnings
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 import numpy as np
@@ -36,6 +37,24 @@ __all__ = ["FavorIndex", "SearchResult"]
 
 _LEGACY_BUILD_KW = ("sel_cfg", "prefbf_chunk", "quantize", "pq_m", "pq_nbits",
                     "pq_train_iters", "pq_train_sample", "rerank")
+
+
+@dataclass
+class _MergePrep:
+    """Everything ``merge_prepare`` built off the serving path, ready for an
+    atomic ``merge_commit`` swap.  ``graph_epoch`` guards staleness."""
+    from_slot: int
+    n_live: int
+    graph_epoch: int
+    index: HnswIndex
+    attrs: "F.AttributeTable"
+    chunk: int
+    pv: object
+    pn0: object
+    pi: object
+    pf: object
+    codes: object
+    g: dict
 
 
 def _spec_from_legacy(kw: dict) -> BuildSpec:
@@ -322,6 +341,100 @@ class FavorIndex:
                     "deletes": 0, "replaced": 0, "missing_deletes": 0}
         return self.live.stats()
 
+    def merge_prepare(self, *, wave: int = 512,
+                      on_wave=None) -> "_MergePrep | None":
+        """Phase 1 of a merge: snapshot the delta and run the expensive work
+        (bulk graph build, attribute concat, scan-array padding, code
+        re-encode, device upload) WITHOUT mutating any served state.
+
+        Safe to run off-thread while serving continues: the snapshot
+        boundary is ``cnt = delta.count`` read *before* any array reference
+        (append never rewrites rows below ``count`` and ``_grow`` reallocs,
+        so rows ``[:cnt]`` of whatever arrays we then see are stable), and
+        ``bulk_add`` builds into a fresh builder without touching the source
+        index.  Returns None when there is nothing to merge.
+        """
+        from ..index.bulk import bulk_add
+        live = self.live
+        if live is None or live.delta.count == 0:
+            return None
+        d = live.delta
+        cnt = int(d.count)       # snapshot boundary: read BEFORE array refs
+        index, attrs = self.index, self.attrs
+        vecs = d.vectors[:cnt].copy()
+        ints = d.ints[:cnt].copy()
+        flts = d.floats[:cnt].copy()
+        link = d.alive[:cnt].copy()
+        graph_epoch = self.epochs.graph
+        new_index = bulk_add(index, vecs, wave=wave, link=link,
+                             on_wave=on_wave)
+        new_attrs = F.AttributeTable(
+            self.schema,
+            np.concatenate([attrs.ints, ints]),
+            np.concatenate([attrs.floats, flts]))
+        chunk = min(self.spec.prefbf_chunk, max(256, new_index.n))
+        pv, pn, pi, pf = prefbf.pad_db(new_index.vectors,
+                                       new_index.norms.astype(np.float32),
+                                       new_attrs.ints, new_attrs.floats,
+                                       chunk)
+        codes = None
+        if self.codebook is not None:
+            from .. import quant
+            codes = jnp.asarray(quant.encode(self.codebook, pv))
+        # pre-upload the graph/scan arrays here (the slow part); the commit
+        # assigns the dict directly instead of re-keying the memo
+        g = dict(graph_arrays(new_index, new_attrs, version=0))
+        return _MergePrep(
+            from_slot=cnt, n_live=int(link.sum()), graph_epoch=graph_epoch,
+            index=new_index, attrs=new_attrs, chunk=chunk,
+            pv=jnp.asarray(pv), pn0=jnp.asarray(pn), pi=jnp.asarray(pi),
+            pf=jnp.asarray(pf), codes=codes, g=g)
+
+    def merge_commit(self, prep: "_MergePrep") -> dict | None:
+        """Phase 2: atomic swap of the served state onto the prepared merge.
+
+        Cheap (no device upload, no build) -- callers holding a serving lock
+        can run it without a perceptible stall.  Mutations that landed since
+        the snapshot are honored: deletes become tombstones on the fresh
+        arrays (current ``live`` alive state wins over the snapshot's), and
+        delta slots past the snapshot boundary carry into the new delta with
+        their ids intact (positional-id discipline).  Returns None -- and
+        changes nothing -- if the base graph was rebuilt since the snapshot
+        (a competing merge or explicit rebuild), in which case the prepared
+        state is stale and must be discarded.
+        """
+        live = self.live
+        if live is None or self.epochs.graph != prep.graph_epoch:
+            return None
+        cnt = prep.from_slot
+        base = (live.base_alive if live.base_alive is not None
+                else np.ones((live.base_n,), bool))
+        alive = np.concatenate([base, live.delta.alive[:cnt]])
+        self._alive = None if alive.all() else alive
+        self.index = prep.index
+        self.attrs = prep.attrs
+        self.prefbf_chunk = prep.chunk
+
+        self._pn0 = prep.pn0
+        pn = prep.pn0
+        if self._alive is not None:
+            pad = int(pn.shape[0]) - prep.index.n
+            alive_pad = np.concatenate([self._alive, np.ones((pad,), bool)])
+            pn = jnp.where(jnp.asarray(alive_pad), pn, jnp.inf)
+        self._pf = (prep.pv, pn, prep.pi, prep.pf)
+        self._codes = prep.codes
+
+        # vectors (membership) and graph (base arrays rebuilt) move;
+        # attributes deliberately do not -- the estimator sample is untouched
+        self.epochs.bump("vectors", "graph")
+        self.g = dict(prep.g)
+        self._attach_scorer_arrays()
+        if self._alive is not None:
+            self.g["alive"] = jnp.asarray(self._alive)
+        live.reset_after_merge(prep.index.n, self._alive, from_slot=cnt)
+        return {"merged_slots": cnt, "merged_live": prep.n_live,
+                "n": prep.index.n}
+
     def merge(self, *, wave: int = 512) -> dict:
         """Fold the delta segment into the base HNSW (device-parallel bulk
         build) and return to the static fast path.
@@ -331,53 +444,17 @@ class FavorIndex:
         The selectivity sample is intentionally left untouched: base rows
         keep their ids and their attributes, so the estimator (and any
         selectivity cache over it) stays warm across merges.
+
+        Implemented as ``merge_prepare`` + ``merge_commit``; background
+        callers run the two phases on different threads.
         """
-        from ..index.bulk import bulk_add
-        live = self.live
-        if live is None or live.delta.count == 0:
+        prep = self.merge_prepare(wave=wave)
+        if prep is None:
             return {"merged_slots": 0, "merged_live": 0, "n": self.index.n}
-        d = live.delta
-        cnt = d.count
-        n_live = d.live_count
-        new_index = bulk_add(self.index, d.vectors[:cnt], wave=wave,
-                             link=d.alive[:cnt])
-        new_attrs = F.AttributeTable(
-            self.schema,
-            np.concatenate([self.attrs.ints, d.ints[:cnt]]),
-            np.concatenate([self.attrs.floats, d.floats[:cnt]]))
-        alive = live.merged_alive()
-        self._alive = None if alive.all() else alive
-        self.index = new_index
-        self.attrs = new_attrs
-
-        self.prefbf_chunk = min(self.spec.prefbf_chunk,
-                                max(256, new_index.n))
-        pv, pn, pi, pf = prefbf.pad_db(new_index.vectors,
-                                       new_index.norms.astype(np.float32),
-                                       new_attrs.ints, new_attrs.floats,
-                                       self.prefbf_chunk)
-        self._pn0 = jnp.asarray(pn)
-        if self._alive is not None:
-            pad = pn.shape[0] - new_index.n
-            alive_pad = np.concatenate([self._alive, np.ones((pad,), bool)])
-            pn = np.where(alive_pad, pn, np.inf).astype(np.float32)
-        self._pf = (jnp.asarray(pv), jnp.asarray(pn), jnp.asarray(pi),
-                    jnp.asarray(pf))
-        if self.codebook is not None:
-            from .. import quant
-            self._codes = jnp.asarray(quant.encode(self.codebook, pv))
-
-        # vectors (membership) and graph (base arrays rebuilt) move;
-        # attributes deliberately do not -- the estimator sample is untouched
-        self.epochs.bump("vectors", "graph")
-        self.g = dict(graph_arrays(self.index, self.attrs,
-                                   version=self.epochs.total))
-        self._attach_scorer_arrays()
-        if self._alive is not None:
-            self.g["alive"] = jnp.asarray(self._alive)
-        live.reset_after_merge(new_index.n, self._alive)
-        return {"merged_slots": cnt, "merged_live": n_live,
-                "n": new_index.n}
+        out = self.merge_commit(prep)
+        if out is None:  # pragma: no cover - single-threaded epochs are stable
+            raise RuntimeError("merge_commit rejected a same-thread prepare")
+        return out
 
     @property
     def backend(self):

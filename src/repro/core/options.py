@@ -203,11 +203,19 @@ class FrontEndSpec:
     default_tenant: TenantSpec = field(default_factory=TenantSpec)
     tenants: tuple = ()
     latency_window: int = 4096
+    # executor slots for pipelined step dispatch: N > 1 lets the front-end
+    # overlap one step's device wait with the next step's host phase
+    # (routing/compile/cache), riding JAX async dispatch.  Responses still
+    # resolve in dispatch order; 1 = the serialized baseline.
+    parallel_steps: int = 1
 
     def __post_init__(self):
         if self.coalesce_ms < 0.0:
             raise ValueError(f"FrontEndSpec.coalesce_ms must be >= 0, "
                              f"got {self.coalesce_ms}")
+        if self.parallel_steps < 1:
+            raise ValueError(f"FrontEndSpec.parallel_steps must be >= 1, "
+                             f"got {self.parallel_steps}")
         for name in ("coalesce_target", "max_batch"):
             v = getattr(self, name)
             if v is not None and v < 1:

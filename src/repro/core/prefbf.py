@@ -74,22 +74,28 @@ def prefbf_topk(vectors, norms, ints, floats, queries, programs, *,
     init = (jnp.full((b, k), INF), jnp.full((b, k), -1, jnp.int32))
 
     def step(carry, xs):
+        # The carry holds *squared* (clamped) distances; sqrt is monotone on
+        # [0, inf) so the running top-k selection is unchanged and the sqrt is
+        # deferred to the final (B, k) rows after the scan.
         best_d, best_i = carry
         v, nn, ii, ff, start = xs
         dot = queries @ v.T                                  # (B, chunk) MXU
-        d2 = nn[None, :] + qn[:, None] - 2.0 * dot
-        dist = jnp.sqrt(jnp.maximum(d2, 0.0))
+        d2 = jnp.maximum(nn[None, :] + qn[:, None] - 2.0 * dot, 0.0)
         mask = F.eval_program_batched(programs, ii, ff, xp=jnp)  # (B, chunk)
-        dist = jnp.where(mask, dist, INF)
+        d2 = jnp.where(mask, d2, INF)
         ids = (start + jnp.arange(chunk, dtype=jnp.int32))[None, :].repeat(b, 0)
-        md = jnp.concatenate([best_d, dist], axis=1)
+        md = jnp.concatenate([best_d, d2], axis=1)
         mi = jnp.concatenate([best_i, ids], axis=1)
-        order = jnp.argsort(md, axis=1)[:, :k]
-        return (jnp.take_along_axis(md, order, axis=1),
-                jnp.take_along_axis(mi, order, axis=1)), None
+        # O((k+chunk) log k) selection instead of a full argsort.  lax.top_k
+        # breaks ties toward the lower index, same as the stable argsort it
+        # replaces: carried entries (lower concat index) beat equal chunk
+        # entries, and within a chunk the smaller db id wins.
+        neg_d, order = jax.lax.top_k(-md, k)
+        return (-neg_d, jnp.take_along_axis(mi, order, axis=1)), None
 
     starts = (jnp.arange(n_chunks, dtype=jnp.int32) * chunk)
     (best_d, best_i), _ = jax.lax.scan(step, init, (vc, nc, ic, fc, starts))
+    best_d = jnp.sqrt(best_d)
     best_i = jnp.where(jnp.isfinite(best_d), best_i, -1)
     if valid is not None:
         vmask = jnp.asarray(valid, bool)[:, None]

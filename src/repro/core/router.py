@@ -52,6 +52,100 @@ class SearchResult:
         return len(self.ids) / max(self.elapsed_s, 1e-12)
 
 
+@dataclass(eq=False)
+class PendingExecution:
+    """In-flight result of ``execute(..., defer=True)``.
+
+    The host phase (filter compile, cache lookup, selectivity estimate,
+    routing, bucket padding, backend dispatch) has already run and the
+    backend's device work is in flight behind JAX's async dispatch;
+    ``finish()`` blocks on the device transfers, reassembles the batch, and
+    fires the backend's ``record_result`` hook plus the obs trace.  Passing
+    ``hook_lock`` runs only those *mutating* host hooks (cache record, obs
+    registry) under the lock -- the device sync itself never holds it, which
+    is what lets a pipelined engine overlap one step's device wait with the
+    next step's host phase.  ``finish()`` is idempotent: the first call
+    materializes the SearchResult, later calls return the same object.
+    """
+    backend: object
+    opts: SearchOptions
+    b: int
+    t0: float
+    ids: np.ndarray
+    dists: np.ndarray
+    p_hat: np.ndarray
+    routed_brute: np.ndarray
+    hops: np.ndarray
+    path_td: np.ndarray
+    waves: np.ndarray
+    miss: np.ndarray
+    tr: object = None
+    obs: object = None
+    programs: dict | None = None
+    mq: object = None
+    mprogs: dict | None = None
+    mp_hat: np.ndarray | None = None
+    plan: RoutePlan | None = None
+    gi: np.ndarray | None = None
+    bi: np.ndarray | None = None
+    graph_out: dict | None = None
+    brute_out: tuple | None = None
+    graph_diag: bool = True
+    waves_diag: bool = True
+    _result: SearchResult | None = None
+
+    def finish(self, hook_lock=None) -> SearchResult:
+        if self._result is not None:
+            return self._result
+        ids, dists, miss = self.ids, self.dists, self.miss
+        gi, bi = self.gi, self.bi
+        if self.graph_out is not None:
+            out = self.graph_out
+            ids[miss[gi]] = np.asarray(out["ids"])[:len(gi)]
+            dists[miss[gi]] = np.asarray(out["dists"])[:len(gi)]
+            if "hops" in out:
+                self.hops[miss[gi]] = np.asarray(out["hops"])[:len(gi)]
+                self.path_td[miss[gi]] = np.asarray(
+                    out["path_td"])[:len(gi)]
+            else:
+                self.graph_diag = False
+            if "waves" in out:
+                self.waves[miss[gi]] = np.asarray(out["waves"])[:len(gi)]
+            else:
+                self.waves_diag = False
+        if self.brute_out is not None:
+            bid, bd = self.brute_out
+            ids[miss[bi]] = np.asarray(bid)[:len(bi)]
+            dists[miss[bi]] = np.asarray(bd)[:len(bi)]
+        # the np.asarray conversions above synced the in-flight device work
+        elapsed = time.perf_counter() - self.t0
+        with (hook_lock if hook_lock is not None else nullcontext()):
+            record = getattr(self.backend, "record_result", None)
+            if record is not None and len(miss):
+                with (self.tr.span("cache_record") if self.tr is not None
+                      else nullcontext()):
+                    record(np.asarray(self.mq), self.mprogs, self.opts,
+                           ids[miss], dists[miss], self.mp_hat,
+                           self.plan.brute)
+            if self.tr is not None:
+                self.tr.attrs["cache_hits"] = int(self.b - len(miss))
+                self.tr.attrs["graph"] = int(
+                    self.b - int(self.routed_brute.sum()))
+                self.tr.attrs["brute"] = int(self.routed_brute.sum())
+                programs = self.programs
+                self.obs.finish_trace(
+                    self.tr, p_hat=self.p_hat,
+                    routed_brute=self.routed_brute, ef=self.opts.ef,
+                    signatures=lambda: F.batch_signatures(programs))
+        self._result = SearchResult(
+            ids, dists, self.p_hat, self.routed_brute,
+            self.hops if self.graph_diag else None,
+            self.path_td if self.graph_diag else None,
+            waves=self.waves if self.waves_diag else None,
+            elapsed_s=elapsed)
+        return self._result
+
+
 @dataclass(frozen=True)
 class RoutePlan:
     """Per-query routing decision: True -> PreFBF brute scan."""
@@ -116,7 +210,8 @@ def take_programs(programs: dict, idx: np.ndarray) -> dict:
 
 
 def execute(backend, queries, filters, opts: SearchOptions, *,
-            registry=None, scopes=None, obs=None) -> SearchResult:
+            registry=None, scopes=None, obs=None,
+            defer: bool = False) -> SearchResult | PendingExecution:
     """Run one filtered-ANNS batch through ``backend`` (paper Fig. 1 online
     phase): result-cache fast path -> estimate -> route -> per-route
     execution -> reassembly.
@@ -155,6 +250,13 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
     ``jax.profiler.TraceAnnotation`` scopes named by route and bucket.
     Obs hooks only *observe*; results are bit-identical with obs absent,
     disabled, or sampled out.
+
+    ``defer=True`` returns a ``PendingExecution`` after the host phase:
+    the backend searches are *dispatched* (device work queued behind JAX
+    async dispatch) but not fetched, and no mutating hook has fired.  The
+    caller finishes the step -- possibly from another thread, possibly
+    after dispatching more steps -- with ``pending.finish()``, which
+    yields the identical SearchResult the synchronous path returns.
     """
     backend.validate(opts)
     queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
@@ -187,9 +289,6 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
     hops = np.zeros((b,), np.int64)
     path_td = np.zeros((b,), np.int64)
     waves = np.zeros((b,), np.int64)
-    graph_diag = True  # False once a graph backend omits hops/path_td
-    waves_diag = True  # False once a graph backend omits waves
-
     lookup = getattr(backend, "lookup_result", None)
     with _span("cache_lookup") as sp:
         cached = (lookup(np.asarray(queries), programs, opts)
@@ -206,6 +305,11 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
         miss = np.nonzero(~np.asarray(cached["hit"], bool))[0]
     else:
         miss = np.arange(b)
+
+    pend = PendingExecution(
+        backend=backend, opts=opts, b=b, t0=t0, ids=ids, dists=dists,
+        p_hat=p_hat, routed_brute=routed_brute, hops=hops, path_td=path_td,
+        waves=waves, miss=miss, tr=tr, obs=obs, programs=programs)
 
     if len(miss):
         # avoid re-slicing (device round-trips) when a sub-batch is the
@@ -234,6 +338,8 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
         routed_brute[miss] = plan.brute
 
         gi, bi = plan.graph_idx, plan.brute_idx
+        pend.mq, pend.mprogs, pend.mp_hat = mq, mprogs, mp_hat
+        pend.plan, pend.gi, pend.bi = plan, gi, bi
         if len(gi):
             with _span("graph", rows=len(gi)) as gspan:
                 whole = len(gi) == len(miss)
@@ -251,19 +357,8 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
                     gspan.attrs["pad_frac"] = 1.0 - len(gi) / bucket
                 batching.record(registry, "graph", bucket, len(gi), opts)
                 with _span("search"), _ann(f"favor/graph/b{bucket}"):
-                    out = backend.search_graph(gq, gprogs, jnp.asarray(gp),
-                                               opts, valid=gvalid)
-                ids[miss[gi]] = np.asarray(out["ids"])[:len(gi)]
-                dists[miss[gi]] = np.asarray(out["dists"])[:len(gi)]
-                if "hops" in out:
-                    hops[miss[gi]] = np.asarray(out["hops"])[:len(gi)]
-                    path_td[miss[gi]] = np.asarray(out["path_td"])[:len(gi)]
-                else:
-                    graph_diag = False
-                if "waves" in out:
-                    waves[miss[gi]] = np.asarray(out["waves"])[:len(gi)]
-                else:
-                    waves_diag = False
+                    pend.graph_out = backend.search_graph(
+                        gq, gprogs, jnp.asarray(gp), opts, valid=gvalid)
         if len(bi):
             with _span("brute", rows=len(bi)) as bspan:
                 whole = len(bi) == len(miss)
@@ -280,27 +375,7 @@ def execute(backend, queries, filters, opts: SearchOptions, *,
                     bspan.attrs["pad_frac"] = 1.0 - len(bi) / bucket
                 batching.record(registry, "brute", bucket, len(bi), opts)
                 with _span("search"), _ann(f"favor/brute/b{bucket}"):
-                    bid, bd = backend.search_brute(bq, bprogs, opts,
-                                                   valid=bvalid)
-                ids[miss[bi]] = np.asarray(bid)[:len(bi)]
-                dists[miss[bi]] = np.asarray(bd)[:len(bi)]
+                    pend.brute_out = backend.search_brute(bq, bprogs, opts,
+                                                          valid=bvalid)
 
-        record = getattr(backend, "record_result", None)
-        if record is not None:
-            with _span("cache_record"):
-                record(np.asarray(mq), mprogs, opts, ids[miss], dists[miss],
-                       mp_hat, plan.brute)
-    # the np.asarray conversions above already synced the device work
-    elapsed = time.perf_counter() - t0
-    if tr is not None:
-        tr.attrs["cache_hits"] = int(b - len(miss))
-        tr.attrs["graph"] = int(b - int(routed_brute.sum()))
-        tr.attrs["brute"] = int(routed_brute.sum())
-        obs.finish_trace(
-            tr, p_hat=p_hat, routed_brute=routed_brute, ef=opts.ef,
-            signatures=lambda: F.batch_signatures(programs))
-    return SearchResult(ids, dists, p_hat, routed_brute,
-                        hops if graph_diag else None,
-                        path_td if graph_diag else None,
-                        waves=waves if waves_diag else None,
-                        elapsed_s=elapsed)
+    return pend if defer else pend.finish()

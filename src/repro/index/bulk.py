@@ -127,7 +127,8 @@ def _link_from_row(b: _Builder, node: int, ids: np.ndarray,
 
 
 def bulk_add(index: HnswIndex, new_vectors: np.ndarray, *,
-             wave: int = 512, link: np.ndarray | None = None) -> HnswIndex:
+             wave: int = 512, link: np.ndarray | None = None,
+             on_wave=None) -> HnswIndex:
     """Append ``new_vectors`` to a finalized index and return the grown one.
 
     ``link`` (optional bool mask per new row) marks which rows participate
@@ -135,6 +136,10 @@ def bulk_add(index: HnswIndex, new_vectors: np.ndarray, *,
     position, keeping ids positional -- but never linked, which is how
     ``merge()`` carries already-tombstoned delta slots.  Rows keep their
     order: new row j becomes node ``index.n + j``.
+
+    ``on_wave`` (optional zero-arg callable) is invoked between device
+    waves; background merges use it as a pacing point to yield to foreground
+    serving without holding any lock across the build.
     """
     new_vectors = np.ascontiguousarray(new_vectors, np.float32)
     m = new_vectors.shape[0]
@@ -171,6 +176,9 @@ def bulk_add(index: HnswIndex, new_vectors: np.ndarray, *,
             i += wb
             continue
 
+        if on_wave is not None:
+            on_wave()
+
         # one batched candidate search over the pre-wave snapshot
         npad = _pow2_at_least(max(b.n, _MIN_PAD))
         g = _graph_view(b, npad)
@@ -204,7 +212,7 @@ def bulk_add(index: HnswIndex, new_vectors: np.ndarray, *,
 
 
 def build_hnsw_bulk(vectors: np.ndarray, params: HnswParams | None = None,
-                    *, wave: int = 512) -> HnswIndex:
+                    *, wave: int = 512, on_wave=None) -> HnswIndex:
     """Build an index from scratch through the wave pipeline (a from-zero
     ``bulk_add``); drop-in for ``build_hnsw`` where throughput matters more
     than draw-for-draw RNG parity with the sequential loop."""
@@ -216,4 +224,4 @@ def build_hnsw_bulk(vectors: np.ndarray, params: HnswParams | None = None,
         node_level=np.zeros((0,), np.int16),
         entry_point=-1, max_level=-1, delta_d=0.0, params=params,
         norms=np.zeros((0,), np.float32))
-    return bulk_add(empty, vectors, wave=wave)
+    return bulk_add(empty, vectors, wave=wave, on_wave=on_wave)

@@ -47,6 +47,23 @@ def compose_topk(base_ids: np.ndarray, base_d: np.ndarray,
     return np.where(np.isfinite(out_d), out_i, -1), out_d
 
 
+def compose_topk_dev(base_ids, base_d, extra_ids, extra_d, k: int):
+    """Device-side ``compose_topk``: same stable sort-merge, but on jnp
+    arrays so the composition rides JAX async dispatch instead of forcing a
+    host sync mid-step.  ``jnp.argsort`` is stable by default, so base rows
+    win exact ties just like the host path; the caller converts to int64 at
+    the final host transfer.  Returns (ids (B, k) int32, dists (B, k) f32).
+    """
+    ids = jnp.concatenate([jnp.asarray(base_ids, jnp.int32),
+                           jnp.asarray(extra_ids, jnp.int32)], axis=1)
+    d = jnp.concatenate([jnp.asarray(base_d, jnp.float32),
+                         jnp.asarray(extra_d, jnp.float32)], axis=1)
+    order = jnp.argsort(d, axis=1)[:, :k]
+    out_d = jnp.take_along_axis(d, order, axis=1)
+    out_i = jnp.take_along_axis(ids, order, axis=1)
+    return jnp.where(jnp.isfinite(out_d), out_i, -1), out_d
+
+
 class DeltaSegment:
     """Append-only (vectors, attributes, global ids) buffer with an alive
     mask, scannable on device.
@@ -147,6 +164,7 @@ class DeltaSegment:
                 "norms": jnp.asarray(norms),
                 "ints": jnp.asarray(self.ints),
                 "floats": jnp.asarray(self.floats),
+                "ids": jnp.asarray(self.ids.astype(np.int32)),
             }
         return self._dev
 
@@ -172,6 +190,23 @@ class DeltaSegment:
         d = np.asarray(d)
         gids = np.where(slots >= 0, self.ids[np.maximum(slots, 0)], -1)
         return gids.astype(np.int64), d
+
+    def scan_dev(self, queries, programs: dict, *, k: int, valid=None):
+        """``scan`` staying on device: returns jnp (global ids (B, k) int32,
+        dists (B, k) f32) without synchronizing, so callers can fold the
+        delta into base results via ``compose_topk_dev`` and keep the whole
+        step async.  The id gather uses the device mirror of ``self.ids``."""
+        b = int(np.asarray(queries).shape[0])
+        if self.live_count == 0:
+            return (jnp.full((b, k), -1, jnp.int32),
+                    jnp.full((b, k), jnp.inf, jnp.float32))
+        dv = self._device_view()
+        slots, d = prefbf.prefbf_topk(
+            dv["vectors"], dv["norms"], dv["ints"], dv["floats"],
+            jnp.asarray(queries), programs, k=k, chunk=self._cap,
+            use_pallas=False, valid=valid)
+        gids = jnp.where(slots >= 0, dv["ids"][jnp.maximum(slots, 0)], -1)
+        return gids, d
 
     # -- accounting -----------------------------------------------------------
     def stats(self) -> dict:

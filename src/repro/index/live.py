@@ -118,14 +118,33 @@ class LiveState:
         return np.concatenate([base, self.delta.alive[: self.delta.count]])
 
     def reset_after_merge(self, new_base_n: int,
-                          new_alive: np.ndarray | None) -> None:
+                          new_alive: np.ndarray | None, *,
+                          from_slot: int | None = None) -> None:
         """Fold-complete: the delta is now part of the base.  Cumulative
-        counters survive; id allocation continues from the new row count."""
+        counters survive; id allocation continues from the new row count.
+
+        ``from_slot`` supports background merges: the merge built from a
+        snapshot of the first ``from_slot`` delta slots, so slots that
+        arrived during the build carry into the fresh delta with their OLD
+        ids.  The positional-id invariant keeps those ids valid: a carried
+        slot ``s`` had ``id = old_base_n + s``, and since the merge appended
+        exactly ``from_slot`` rows (``new_base_n = old_base_n + from_slot``),
+        that id equals ``new_base_n + (s - from_slot)`` -- exactly its slot
+        in the fresh segment.  Slots that died mid-build are re-killed so
+        they stay positional tombstones."""
+        old = self.delta
         self.base_n = int(new_base_n)
         self.base_alive = (None if new_alive is None
                            else np.asarray(new_alive, bool).copy())
-        self.delta = DeltaSegment(self.delta.dim, self.delta.m_i,
-                                  self.delta.m_f)
+        fresh = DeltaSegment(old.dim, old.m_i, old.m_f)
+        if from_slot is not None and int(from_slot) < old.count:
+            sl = slice(int(from_slot), old.count)
+            fresh.append(old.vectors[sl], old.ints[sl], old.floats[sl],
+                         old.ids[sl])
+            for s in range(int(from_slot), old.count):
+                if not old.alive[s]:
+                    fresh.kill(int(old.ids[s]))
+        self.delta = fresh
 
     # -- read views -----------------------------------------------------------
     def view(self) -> LiveView:

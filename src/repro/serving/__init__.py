@@ -1,6 +1,7 @@
 from ..core.options import FrontEndSpec, TenantSpec
 from .engine import Request, Response, ServeEngine
 from .frontend import FrontEnd, Overloaded
+from .merge import MergeController
 
-__all__ = ["FrontEnd", "FrontEndSpec", "Overloaded", "Request", "Response",
-           "ServeEngine", "TenantSpec"]
+__all__ = ["FrontEnd", "FrontEndSpec", "MergeController", "Overloaded",
+           "Request", "Response", "ServeEngine", "TenantSpec"]

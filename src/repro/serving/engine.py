@@ -20,6 +20,7 @@ still works and wraps it in a LocalBackend.
 """
 from __future__ import annotations
 
+import threading
 import time
 import warnings
 from collections import deque
@@ -65,6 +66,17 @@ class Response:
     latency_s: float
 
 
+@dataclass(eq=False)
+class _InflightStep:
+    """One dispatched-but-unfinished engine step (``begin_batch`` output):
+    the host phase ran and the device work is queued; ``finish_batch``
+    blocks on it and does the per-request accounting."""
+    batch: list[Request]
+    pending: "router.PendingExecution"
+    queries: np.ndarray
+    flts: list
+
+
 def _bucket(n: int, spec: BatchSpec | None = None) -> int:
     """Bucket size for an n-row batch off the one BatchSpec ladder (the
     engine's legacy whole-batch pre-pad and the router's sub-batch padding
@@ -80,6 +92,7 @@ class ServeEngine:
                  max_batch: int = 256, max_wait_ms: float = 2.0,
                  latency_window: int = 4096,
                  merge_delta_frac: float | None = None,
+                 merge_background: bool = False,
                  obs: "Obs | ObsSpec | None" = None,
                  time_fn=time.perf_counter,
                  k: int | None = None, ef: int | None = None,
@@ -140,6 +153,14 @@ class ServeEngine:
             raise ValueError(f"merge_delta_frac must be > 0, "
                              f"got {merge_delta_frac}")
         self.merge_delta_frac = merge_delta_frac
+        # one reentrant lock guards every host-side mutable surface (queue,
+        # counters, cache/backend hooks, merge commit).  Device work is
+        # dispatched *inside* the lock but synced *outside* it
+        # (PendingExecution.finish), so N pipelined steps overlap their
+        # device waits while host phases stay serialized.  Reentrant
+        # because finish-side hooks (_maybe_merge -> backend.merge) and the
+        # merge controller's commit both re-enter engine methods.
+        self._lock = threading.RLock()
         # one metrics registry serves every stats surface (repro.obs): the
         # engine records typed instruments, and nested legacy dicts (shape
         # ledger, cache layers, scorers, live gauges) join as views, so
@@ -184,6 +205,23 @@ class ServeEngine:
         self._m_mutations = reg.counter(
             "favor_mutations_total", "Live-index mutations, by operation",
             labels=("op",))
+        self._m_inflight = reg.gauge(
+            "favor_inflight_steps",
+            "Engine steps dispatched to the device but not yet finished "
+            "(pipelined serving depth)")
+        self._last_step_end = 0.0   # perf_counter of last finish_batch
+        self._m_merge_active = reg.gauge(
+            "favor_merge_active",
+            "1 while a background merge is building or committing")
+        self._m_merge_s = reg.histogram(
+            "favor_merge_seconds",
+            "Wall time of one whole merge (prepare + commit)",
+            buckets=(0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0))
+        self._m_merge_stall = reg.histogram(
+            "favor_merge_stall_seconds",
+            "Time a merge commit held the engine lock (the only slice of a "
+            "background merge that can stall a step)",
+            buckets=(1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0))
         reg.register_view("batching", self.registry.stats)
         reg.register_view("scorers", self._route_scorers)
         reg.register_view("mutations", self._mutation_view)
@@ -199,6 +237,20 @@ class ServeEngine:
         cache_reset = getattr(backend, "reset_cache_counters", None)
         if callable(cache_reset):
             reg.on_reset(cache_reset)
+        # background incremental merge: a MergeController worker owns the
+        # expensive build phase off the serving path; _maybe_merge pokes it
+        # instead of merging inline
+        self._merge_ctl = None
+        if merge_background:
+            from .merge import MergeController
+            self._merge_ctl = MergeController(self)
+
+    def close(self) -> None:
+        """Stop the background merge worker (if any).  Idempotent; the
+        engine itself keeps serving after close -- only the worker dies."""
+        if self._merge_ctl is not None:
+            self._merge_ctl.stop()
+            self._merge_ctl = None
 
     # -- live-index mutation API ---------------------------------------------
     def _mutable(self, op: str):
@@ -212,35 +264,51 @@ class ServeEngine:
 
     def upsert(self, vectors, ints=None, floats=None, *, replace=None):
         """Stream rows into the backend's live delta; returns their ids."""
-        ids = self._mutable("upsert")(vectors, ints, floats, replace=replace)
-        self._m_mutations.inc(int(len(ids)), op="upserts")
-        return ids
+        with self._lock:
+            ids = self._mutable("upsert")(vectors, ints, floats,
+                                          replace=replace)
+            self._m_mutations.inc(int(len(ids)), op="upserts")
+            return ids
 
     def delete(self, ids) -> int:
         """Tombstone ids; returns how many were found alive."""
-        n = int(self._mutable("delete")(ids))
-        self._m_mutations.inc(n, op="deletes")
-        return n
+        with self._lock:
+            n = int(self._mutable("delete")(ids))
+            self._m_mutations.inc(n, op="deletes")
+            return n
 
     def merge(self, *, wave: int = 512) -> dict:
         """Fold the delta into the base index now (manual compaction)."""
-        out = self._mutable("merge")(wave=wave)
-        self._m_mutations.inc(op="merges")
-        return out
+        with self._lock:
+            out = self._mutable("merge")(wave=wave)
+            self._m_mutations.inc(op="merges")
+            return out
+
+    def _merge_due(self) -> bool:
+        """True once the unmerged delta crosses ``merge_delta_frac`` of the
+        base row count (shared trigger for the inline scheduler and the
+        background controller)."""
+        if self.merge_delta_frac is None:
+            return False
+        live_stats = getattr(self.backend, "live_stats", None)
+        if live_stats is None:
+            return False
+        st = live_stats()
+        return bool(st["delta_rows"] and
+                    (st["delta_rows"] >=
+                     self.merge_delta_frac * max(st["base_rows"], 1)))
 
     def _maybe_merge(self) -> None:
         """Between-steps merge scheduling: compact once the delta fraction
         crosses ``merge_delta_frac`` (checked after each served batch, so
-        compaction cost never lands inside a request's latency path)."""
-        if self.merge_delta_frac is None:
+        compaction cost never lands inside a request's latency path).  With
+        a background controller attached, this only *pokes* the worker --
+        the build runs off-thread and commits via an epoch-guarded swap."""
+        if self._merge_ctl is not None:
+            if self._merge_due():
+                self._merge_ctl.poke()
             return
-        live_stats = getattr(self.backend, "live_stats", None)
-        if live_stats is None:
-            return
-        st = live_stats()
-        if st["delta_rows"] and (st["delta_rows"] >=
-                                 self.merge_delta_frac *
-                                 max(st["base_rows"], 1)):
+        if self._merge_due():
             self._mutable("merge")()
             self._m_mutations.inc(op="merges")
             self._m_mutations.inc(op="auto_merges")
@@ -351,12 +419,13 @@ class ServeEngine:
         """Enqueue one request; ``scope`` is the optional tenant/session
         scope id (0 = unscoped) the cache subsystem keys its semantic and
         candidate layers on -- the async front-end sets it per tenant."""
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(query, np.float32), flt,
-                                  scope=int(scope),
-                                  t_submit=self._time()))
-        return rid
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            self.queue.append(Request(rid, np.asarray(query, np.float32),
+                                      flt, scope=int(scope),
+                                      t_submit=self._time()))
+            return rid
 
     def _assemble(self) -> list[Request]:
         take = min(len(self.queue), self.max_batch)
@@ -372,57 +441,90 @@ class ServeEngine:
             return True
         return self._time() - self.queue[0].t_submit >= self.max_wait_s
 
+    def begin_batch(self, force: bool = False) -> "_InflightStep | None":
+        """Host phase of one step: assemble a due batch, run routing +
+        bucket padding, *dispatch* the per-route device work, and return
+        without waiting for it.  The whole phase runs under the engine
+        lock; the returned step's device work rides JAX async dispatch.
+        Returns None when no batch is due."""
+        with self._lock:
+            if not self.queue or not (force or self._due()):
+                return None
+            batch = self._assemble()
+            self._m_batches.inc()
+            queries = np.stack([r.query for r in batch])
+            flts = [r.flt for r in batch]
+            scopes = [r.scope for r in batch]
+            if self.opts.batch is None:
+                # legacy whole-batch repeat-padding: reuses a compiled
+                # program per batch size, but the post-route gi/bi
+                # sub-batches still recompile per split.  With opts.batch
+                # set the router bucket-pads every sub-batch itself (mask
+                # rows, bit-identical results) so no pre-padding is needed
+                b = _bucket(len(batch), self.pad_spec)
+                if b > len(batch):
+                    queries = np.concatenate(
+                        [queries,
+                         np.repeat(queries[-1:], b - len(batch), 0)])
+                    flts = flts + [flts[-1]] * (b - len(batch))
+                    scopes = scopes + [scopes[-1]] * (b - len(batch))
+            pending = router.execute(
+                self.backend, queries, flts, self.opts,
+                registry=self.registry, scopes=scopes,
+                obs=self.obs if self.obs.enabled else None, defer=True)
+            self._m_inflight.add(1.0)
+            return _InflightStep(batch, pending, queries, flts)
+
+    def finish_batch(self, step: "_InflightStep") -> list[Response]:
+        """Device phase of one step: block on the dispatched work (no lock
+        held -- other threads keep dispatching/submitting), then do the
+        per-request accounting under the lock."""
+        try:
+            # mutating finish hooks (cache record, obs trace) take the
+            # engine lock; the device sync itself runs outside it
+            res = step.pending.finish(hook_lock=self._lock)
+        finally:
+            self._m_inflight.add(-1.0)
+            # lets the merge controller tell "between steps" from "no
+            # traffic" when pacing its build waves
+            self._last_step_end = time.perf_counter()
+        batch = step.batch
+        with self._lock:
+            t_done = self._time()
+            if res.hops is None:
+                self._diag_known = False
+            else:  # slice off legacy whole-batch pad rows, if any
+                self._m_hops.inc(int(res.hops[:len(batch)].sum()))
+                self._m_path_td.inc(int(res.path_td[:len(batch)].sum()))
+            out = []
+            for i, r in enumerate(batch):
+                route = "brute" if res.routed_brute[i] else "graph"
+                self._m_requests.inc(route=route)
+                # waves==0 means no traversal ran for this lane (cache
+                # hit): keep those out of the traversal-depth histogram
+                if (res.waves is not None and route == "graph"
+                        and res.waves[i]):
+                    self._m_waves.observe(float(res.waves[i]), route=route)
+                lat = t_done - r.t_submit
+                self.latencies.append(lat)
+                self._m_latency.observe(lat)
+                out.append(Response(r.rid, res.ids[i], res.dists[i], route,
+                                    float(res.p_hat[i]), lat))
+            self._m_p_hat.observe_many(res.p_hat[:len(batch)])
+            if self.obs.enabled and self.obs.wants_probe:
+                self.obs.probe(self.backend, step.queries[:len(batch)],
+                               step.flts[:len(batch)], res, self.opts)
+            self._maybe_merge()
+            return out
+
     def step(self, force: bool = False) -> list[Response]:
         """Drain one batch if it is due (or ``force``); returns completed
         responses ([] when the engine decided to keep waiting for more
-        requests to fill the batch)."""
-        if not self.queue or not (force or self._due()):
-            return []
-        batch = self._assemble()
-        self._m_batches.inc()
-        queries = np.stack([r.query for r in batch])
-        flts = [r.flt for r in batch]
-        scopes = [r.scope for r in batch]
-        if self.opts.batch is None:
-            # legacy whole-batch repeat-padding: reuses a compiled program
-            # per batch size, but the post-route gi/bi sub-batches still
-            # recompile per split.  With opts.batch set the router bucket-
-            # pads every sub-batch itself (mask rows, bit-identical results)
-            # so no pre-padding is needed here.
-            b = _bucket(len(batch), self.pad_spec)
-            if b > len(batch):
-                queries = np.concatenate(
-                    [queries, np.repeat(queries[-1:], b - len(batch), 0)])
-                flts = flts + [flts[-1]] * (b - len(batch))
-                scopes = scopes + [scopes[-1]] * (b - len(batch))
-        res = router.execute(self.backend, queries, flts, self.opts,
-                             registry=self.registry, scopes=scopes,
-                             obs=self.obs if self.obs.enabled else None)
-        t_done = self._time()
-        if res.hops is None:
-            self._diag_known = False
-        else:  # slice off legacy whole-batch pad rows, if any
-            self._m_hops.inc(int(res.hops[:len(batch)].sum()))
-            self._m_path_td.inc(int(res.path_td[:len(batch)].sum()))
-        out = []
-        for i, r in enumerate(batch):
-            route = "brute" if res.routed_brute[i] else "graph"
-            self._m_requests.inc(route=route)
-            # waves==0 means no traversal ran for this lane (cache hit):
-            # keep those out of the per-route traversal-depth histogram
-            if res.waves is not None and route == "graph" and res.waves[i]:
-                self._m_waves.observe(float(res.waves[i]), route=route)
-            lat = t_done - r.t_submit
-            self.latencies.append(lat)
-            self._m_latency.observe(lat)
-            out.append(Response(r.rid, res.ids[i], res.dists[i], route,
-                                float(res.p_hat[i]), lat))
-        self._m_p_hat.observe_many(res.p_hat[:len(batch)])
-        if self.obs.enabled and self.obs.wants_probe:
-            self.obs.probe(self.backend, queries[:len(batch)],
-                           flts[:len(batch)], res, self.opts)
-        self._maybe_merge()
-        return out
+        requests to fill the batch).  Equivalent to ``begin_batch`` +
+        ``finish_batch`` back to back; pipelined callers (the front-end's
+        executor slots) call the two halves from different threads."""
+        step = self.begin_batch(force)
+        return [] if step is None else self.finish_batch(step)
 
     def run(self, until_empty: bool = True) -> list[Response]:
         """until_empty=True serves the whole queue *deadline-aware*: full

@@ -36,6 +36,7 @@ from __future__ import annotations
 import asyncio
 import time
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 import numpy as np
@@ -93,6 +94,16 @@ class FrontEnd:
         self._wake: asyncio.Event | None = None
         self._dispatches = 0
         self._dispatched_rows = 0
+        # pipelined step dispatch: up to parallel_steps engine steps ride
+        # the executor at once.  Each slot runs the engine's host phase
+        # (serialized by the engine lock) then blocks on its own device
+        # work -- so slot k+1's routing/compile overlaps slot k's device
+        # wait.  Results resolve strictly in dispatch order (the scheduler
+        # only settles the pipeline head).
+        self._slots = self.spec.parallel_steps
+        self._exec = ThreadPoolExecutor(max_workers=self._slots,
+                                        thread_name_prefix="favor-step")
+        self._inflight: deque[asyncio.Future] = deque()
         # join the engine's metrics registry: tenant/coalesce ledgers become
         # a view (snapshot + prometheus exposition), and engine.reset_stats()
         # cascades here -- pre-obs, a bench warmup could never zero the
@@ -214,25 +225,64 @@ class FrontEnd:
         return batch
 
     def _serve(self, batch: list[Pending]):
-        """Runs in the executor thread: one engine dispatch for the whole
-        coalesced batch.  Returns (pending, engine Response) pairs."""
+        """Runs in an executor slot: submit + host-phase dispatch under the
+        engine lock (atomic, so a concurrent slot can never steal this
+        batch's rows), then block on the device work with no lock held.
+        Returns (pending, engine Response) pairs."""
         eng = self.engine
-        by_rid = {}
-        for p in batch:
-            rid = eng.submit(p.query, p.flt,
-                             scope=self._tenants[p.tenant].scope)
-            by_rid[rid] = p
-        out = eng.drain()
+        with eng._lock:
+            by_rid = {}
+            for p in batch:
+                rid = eng.submit(p.query, p.flt,
+                                 scope=self._tenants[p.tenant].scope)
+                by_rid[rid] = p
+            steps = []
+            while True:
+                s = eng.begin_batch(force=True)
+                if s is None:
+                    break
+                steps.append(s)
+        out = []
+        for s in steps:
+            out.extend(eng.finish_batch(s))
         return [(by_rid[r.rid], r) for r in out if r.rid in by_rid]
+
+    def _settle(self, pairs) -> None:
+        """Resolve one completed step's futures (loop thread only)."""
+        now = self._clock()
+        for p, r in pairs:
+            st = self._tenants[p.tenant]
+            st.served += 1
+            lat = now - p.t_submit
+            st.latencies.append(lat)
+            if not p.future.done():
+                p.future.set_result(Response(
+                    r.rid, r.ids, r.dists, r.route, r.p_hat, lat))
 
     async def _run(self) -> None:
         loop = asyncio.get_running_loop()
         while True:
+            # settle whatever finished at the head of the pipeline first
+            # (strictly in dispatch order: only the head is ever popped)
+            while self._inflight and self._inflight[0].done():
+                self._settle(self._inflight.popleft().result())
+            if self._inflight and len(self._inflight) >= self._slots:
+                # every slot busy: wait for the oldest step, keep order
+                self._settle(await self._inflight.popleft())
+                continue
             if not self._pending():
                 if self._closing:
+                    if self._inflight:
+                        # drain: join outstanding device phases before the
+                        # scheduler exits -- a dispatched request always
+                        # resolves with its real result, never a cancel
+                        self._settle(await self._inflight.popleft())
+                        continue
                     return
                 self._wake.clear()
-                if not self._pending() and not self._closing:
+                if (not self._pending() and not self._closing
+                        and not (self._inflight
+                                 and self._inflight[0].done())):
                     await self._wake.wait()
                 continue
             delay = self._hold_delay()
@@ -250,16 +300,11 @@ class FrontEnd:
                 continue
             self._dispatches += 1
             self._dispatched_rows += len(batch)
-            pairs = await loop.run_in_executor(None, self._serve, batch)
-            now = self._clock()
-            for p, r in pairs:
-                st = self._tenants[p.tenant]
-                st.served += 1
-                lat = now - p.t_submit
-                st.latencies.append(lat)
-                if not p.future.done():
-                    p.future.set_result(Response(
-                        r.rid, r.ids, r.dists, r.route, r.p_hat, lat))
+            fut = loop.run_in_executor(self._exec, self._serve, batch)
+            # completion must wake the scheduler even when no new submits
+            # arrive (callback runs on the loop thread)
+            fut.add_done_callback(lambda _f: self._wake.set())
+            self._inflight.append(fut)
 
     # -- shutdown -------------------------------------------------------------
     async def close(self, *, drain: bool = True) -> None:
@@ -268,9 +313,18 @@ class FrontEnd:
         hold), then stops; ``drain=False`` cancels every still-queued
         future instead (clean cancellation: callers see CancelledError,
         the backend never sees the requests).  New submits raise
-        ``Overloaded(reason="closed")`` either way."""
+        ``Overloaded(reason="closed")`` either way.
+
+        Either way, steps already *dispatched* to an executor slot are
+        joined -- the scheduler drains the whole pipeline before exiting,
+        so a dispatched request always resolves with its real result;
+        cancellation only ever reaches requests still sitting in a tenant
+        queue, and a post-close ``submit`` sheds at the door without racing
+        any in-flight step."""
         self._closing = True
         if not drain:
+            # cancel only still-queued requests: in-flight executor work is
+            # past the point of no return and resolves normally below
             for st in self._tenants.values():
                 while st.queue:
                     p = st.queue.popleft()
@@ -280,6 +334,9 @@ class FrontEnd:
             self._wake.set()
             await self._task
         self._task = None
+        # scheduler exit already joined every in-flight step; this just
+        # reaps the worker threads
+        self._exec.shutdown(wait=True)
 
     # -- accounting -----------------------------------------------------------
     def _ledger_view(self) -> dict:
@@ -314,6 +371,8 @@ class FrontEnd:
                 "rows": self._dispatched_rows,
                 "mean_batch": (self._dispatched_rows / self._dispatches
                                if self._dispatches else 0.0),
+                "slots": self._slots,
+                "inflight": len(self._inflight),
             },
         }
 

@@ -1,8 +1,33 @@
+import faulthandler
+import importlib.util
+import os
+
 import numpy as np
 import pytest
 
 from repro.core import (AttributeTable, FavorIndex, HnswParams, paper_schema,
                         random_attributes)
+
+# Per-test hang protection.  With pytest-timeout installed (the dev extra;
+# CI has it) the plugin enforces the `timeout` configured in pyproject.toml.
+# This fallback covers bare containers without the plugin: a faulthandler
+# watchdog dumps every thread's stack and aborts the process if a single
+# test exceeds the same budget -- a deadlocked concurrency test then fails
+# the run with tracebacks instead of wedging it forever.
+_WATCHDOG_S = float(os.environ.get("FAVOR_TEST_TIMEOUT", "300"))
+_HAVE_PYTEST_TIMEOUT = importlib.util.find_spec("pytest_timeout") is not None
+
+
+@pytest.fixture(autouse=True)
+def _hang_watchdog():
+    if _HAVE_PYTEST_TIMEOUT or _WATCHDOG_S <= 0:
+        yield
+        return
+    faulthandler.dump_traceback_later(_WATCHDOG_S, exit=True)
+    try:
+        yield
+    finally:
+        faulthandler.cancel_dump_traceback_later()
 
 
 @pytest.fixture(scope="session")

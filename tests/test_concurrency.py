@@ -1,0 +1,316 @@
+"""Concurrent serving: pipelined step dispatch, background incremental
+merge, and the snapshot discipline that keeps them bit-exact.
+
+The contract under test (PR acceptance):
+
+  * every response produced while search/upsert/delete/background-merge
+    threads interleave is bit-identical to a single-threaded replay of the
+    same component-epoch state -- torn reads never surface as "almost
+    right" results;
+  * a background merge never blocks ``step()`` for more than one build
+    wave: steps keep completing while the merge builds, and the only
+    lock-held slice (the commit swap) is a small fraction of the merge;
+  * the pipelined front-end (``FrontEndSpec.parallel_steps > 1``) returns
+    results bit-identical to the serialized baseline, resolving futures in
+    dispatch order, and ``close()`` joins in-flight device work instead of
+    racing it.
+
+Everything here runs single-process with real threads (the engine lock,
+executor slots and merge worker are the production code paths).
+"""
+import asyncio
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (FavorIndex, HnswParams, LocalBackend, SearchOptions,
+                        paper_schema, random_attributes, router)
+from repro.core import filters as F
+from repro.core.options import FrontEndSpec
+from repro.serving import FrontEnd, ServeEngine
+from repro.serving.merge import MergeController
+
+OPTS = SearchOptions(k=8, ef=64)
+PARAMS = HnswParams(M=8, efc=48, seed=3)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    rng = np.random.default_rng(33)
+    n, d = 768, 16
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    schema = paper_schema()
+    attrs = random_attributes(schema, n, seed=17)
+    return vecs, attrs, schema
+
+
+def _fresh(ds, **engine_kw):
+    vecs, attrs, _ = ds
+    be = LocalBackend(FavorIndex.build(vecs, attrs, PARAMS))
+    return ServeEngine(be, OPTS, **engine_kw)
+
+
+def _queries(ds, n=6, seed=91):
+    vecs, attrs, schema = ds
+    rng = np.random.default_rng(seed)
+    qs = rng.normal(size=(n, vecs.shape[1])).astype(np.float32)
+    flts = [F.Equality("i0", 3) if i % 2 else F.TrueFilter()
+            for i in range(n)]
+    return qs, flts
+
+
+def _serve_one(eng, q, flt):
+    """One single-query step, atomically: submit + host dispatch under the
+    engine lock (so a concurrent thread can't batch-steal the row), device
+    sync outside it -- the same discipline FrontEnd._serve uses."""
+    with eng._lock:
+        rid = eng.submit(q, flt)
+        step = eng.begin_batch(force=True)
+    (r,) = [r for r in eng.finish_batch(step) if r.rid == rid]
+    return r
+
+
+def _delta_rows(ds, count, seed=55):
+    vecs, attrs, schema = ds
+    rng = np.random.default_rng(seed)
+    col = schema.int_index("i0")
+    row = int(np.nonzero(attrs.ints[:, col] == 3)[0][0])
+    return (rng.normal(size=(count, vecs.shape[1])).astype(np.float32),
+            np.tile(attrs.ints[row], (count, 1)),
+            np.tile(attrs.floats[row], (count, 1)))
+
+
+# ---------------------------------------------------------------------------
+# router defer mode: the host/device split is pure plumbing
+# ---------------------------------------------------------------------------
+def test_deferred_execute_bit_identical_and_idempotent(ds):
+    eng = _fresh(ds)
+    qs, flts = _queries(ds, n=4)
+    sync = router.execute(eng.backend, qs, flts, OPTS)
+    pend = router.execute(eng.backend, qs, flts, OPTS, defer=True)
+    assert isinstance(pend, router.PendingExecution)
+    res = pend.finish()
+    assert pend.finish() is res                  # idempotent
+    np.testing.assert_array_equal(res.ids, sync.ids)
+    np.testing.assert_array_equal(res.dists, sync.dists)
+    np.testing.assert_array_equal(res.routed_brute, sync.routed_brute)
+
+
+# ---------------------------------------------------------------------------
+# threaded stress: search + upsert + delete + background merge
+# ---------------------------------------------------------------------------
+def test_threaded_stress_bit_identical_to_epoch_replay(ds):
+    """Concurrent responses must each bit-match the single-threaded replay
+    of one epoch-consistent snapshot (S0 pre-upsert, S1 post-upsert, S2
+    post-delete, S3 post-merge) -- never a torn in-between."""
+    vecs, _, _ = ds
+    qs, flts = _queries(ds)
+    uv, ui, uf = _delta_rows(ds, 24)
+
+    # single-threaded replay on an identical build: capture per-state
+    # ground truth.  Ops and build are seed-deterministic, so the
+    # concurrent engine walks through exactly these four states.
+    rep = _fresh(ds)
+    expected = {}
+
+    def snap(name):
+        expected[name] = [_serve_one(rep, qs[i], flts[i])
+                          for i in range(len(qs))]
+
+    snap("S0")
+    rep_ids = rep.upsert(uv, ui, uf)
+    snap("S1")
+    rep.delete([int(rep_ids[0]), int(rep_ids[1]), 5])
+    snap("S2")
+    rep.merge()
+    snap("S3")
+
+    eng = _fresh(ds, merge_background=True)     # worker idles: no frac set
+    stop = threading.Event()
+    errors = []
+    checked = np.zeros(4, np.int64)             # responses matched per state
+
+    def matches(i, r, name):
+        e = expected[name][i]
+        return (np.array_equal(r.ids, e.ids)
+                and np.array_equal(r.dists, e.dists))
+
+    def searcher(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                i = int(rng.integers(len(qs)))
+                r = _serve_one(eng, qs[i], flts[i])
+                for s, name in enumerate(("S0", "S1", "S2", "S3")):
+                    if matches(i, r, name):
+                        checked[s] += 1
+                        break
+                else:
+                    errors.append(
+                        f"query {i}: ids {r.ids.tolist()} match no "
+                        f"epoch-consistent state")
+                    stop.set()
+        except Exception as e:                  # pragma: no cover
+            errors.append(repr(e))
+            stop.set()
+
+    threads = [threading.Thread(target=searcher, args=(100 + t,))
+               for t in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        time.sleep(0.15)
+        ids = eng.upsert(uv, ui, uf)
+        np.testing.assert_array_equal(ids, rep_ids)   # positional parity
+        time.sleep(0.15)
+        assert eng.delete([int(ids[0]), int(ids[1]), 5]) == 3
+        time.sleep(0.15)
+        # background-style merge while searchers keep serving: the real
+        # prepare (no lock) / epoch-guarded commit (engine lock) path
+        out = eng._merge_ctl.merge_once()
+        assert out is not None and out["merged_slots"] == 24
+        time.sleep(0.15)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+        eng.close()
+    assert not errors, errors[:3]
+    # the run actually crossed the states (not all S0) and finished merged
+    assert checked.sum() > 0 and checked[3] > 0, checked.tolist()
+    for i in range(len(qs)):
+        r = _serve_one(eng, qs[i], flts[i])
+        assert matches(i, r, "S3"), f"post-merge query {i} diverged"
+    st = eng.stats["mutations"]
+    assert st["delta_rows"] == 0 and st["base_rows"] == vecs.shape[0] + 24
+
+
+# ---------------------------------------------------------------------------
+# merge-never-stalls: steps keep completing while the merge builds
+# ---------------------------------------------------------------------------
+def test_background_merge_never_blocks_steps(ds):
+    eng = _fresh(ds, merge_background=True, merge_delta_frac=0.01)
+    # small waves -> many pacing points: the build phase spans many device
+    # dispatches while serving threads keep stepping through the gaps
+    eng._merge_ctl.stop()
+    ctl = eng._merge_ctl = MergeController(eng, wave=16, poll_s=0.005)
+    qs, flts = _queries(ds, n=4)
+    uv, ui, uf = _delta_rows(ds, 96)
+
+    _serve_one(eng, qs[0], flts[0])             # warm the serve path
+    eng.upsert(uv, ui, uf)                      # 96/768 = 12.5% > 1%
+    t_start = time.perf_counter()
+    during, latencies = 0, []
+    # first step's finish pokes the controller; keep stepping until the
+    # merge commits (watchdog-bounded by the suite timeout)
+    while ctl.merges == 0 and time.perf_counter() - t_start < 120.0:
+        active = eng._m_merge_active.value() > 0
+        t0 = time.perf_counter()
+        _serve_one(eng, qs[during % len(qs)], flts[during % len(qs)])
+        lat = time.perf_counter() - t0
+        if active and eng._m_merge_active.value() > 0:
+            during += 1
+            latencies.append(lat)
+    eng.close()
+    assert ctl.merges == 1, "background merge never committed"
+    merge_s = eng._m_merge_s.sum()
+    stall_s = eng._m_merge_stall.sum()
+    assert eng._m_merge_s.count() == 1 and merge_s > 0.0
+    # the build overlapped serving: whole steps completed strictly inside
+    # the merge window, each far shorter than the merge itself
+    assert during >= 1, "no step completed while the merge was building"
+    assert max(latencies) < merge_s, (latencies, merge_s)
+    # the lock-held slice (commit swap) is a fraction of the merge, not
+    # the merge: "one wave" of stall, not seconds of rebuild
+    assert stall_s < merge_s
+    st = eng.stats["mutations"]
+    assert st["auto_merges"] == 1 and st["delta_rows"] == 0
+
+
+def test_merge_commit_epoch_guard_rejects_stale_prepare(ds):
+    be = _fresh(ds).backend
+    uv, ui, uf = _delta_rows(ds, 12)
+    be.upsert(uv, ui, uf)
+    prep = be.merge_prepare()
+    assert prep is not None
+    be.merge()                   # foreground merge moves the graph epoch
+    assert be.merge_commit(prep) is None        # stale build thrown away
+    assert be.live_stats()["delta_rows"] == 0
+
+
+# ---------------------------------------------------------------------------
+# pipelined front-end: bit-identity, ordering, close/drain
+# ---------------------------------------------------------------------------
+def _drive_frontend(ds, spec, n=24):
+    eng = _fresh(ds)
+    fe = FrontEnd(eng, spec)
+    qs, flts = _queries(ds, n=n, seed=7)
+
+    async def main():
+        futs = [asyncio.ensure_future(
+                    fe.submit(qs[i], flts[i], tenant=f"t{i % 2}"))
+                for i in range(n)]
+        outs = await asyncio.gather(*futs)
+        await fe.close()
+        return outs, fe.stats
+
+    outs, st = asyncio.run(main())
+    return outs, st
+
+
+def test_pipelined_frontend_bit_identical_to_serialized(ds):
+    base, _ = _drive_frontend(ds, FrontEndSpec())
+    piped, st = _drive_frontend(ds, FrontEndSpec(parallel_steps=3))
+    assert st["coalesce"]["slots"] == 3
+    assert st["coalesce"]["inflight"] == 0      # close joined the pipeline
+    assert len(piped) == len(base)
+    for b, p in zip(base, piped):
+        np.testing.assert_array_equal(p.ids, b.ids)
+        np.testing.assert_array_equal(p.dists, b.dists)
+        assert p.route == b.route
+
+
+def test_close_drain_joins_inflight_steps(ds):
+    eng = _fresh(ds)
+    fe = FrontEnd(eng, FrontEndSpec(parallel_steps=2))
+    qs, flts = _queries(ds, n=8, seed=3)
+
+    async def main():
+        futs = [asyncio.ensure_future(fe.submit(qs[i], flts[i]))
+                for i in range(len(qs))]
+        await asyncio.sleep(0)                  # scheduler starts dispatching
+        await fe.close(drain=True)
+        outs = await asyncio.gather(*futs)
+        with pytest.raises(Exception) as ei:
+            await fe.submit(qs[0], flts[0])
+        return outs, ei.value
+
+    outs, err = asyncio.run(main())
+    # every already-submitted request resolved with a real result -- close
+    # waited out the in-flight executor steps instead of racing them
+    assert len(outs) == len(qs)
+    assert all(r.ids.shape == (OPTS.k,) for r in outs)
+    assert getattr(err, "reason", None) == "closed"
+    assert eng._m_inflight.value() == 0
+
+
+def test_close_nodrain_cancels_only_queued(ds):
+    eng = _fresh(ds)
+    # a long coalesce hold keeps submissions queued (never dispatched), so
+    # drain=False must cancel them all cleanly
+    fe = FrontEnd(eng, FrontEndSpec(parallel_steps=2, coalesce_ms=5000.0,
+                                    coalesce_target=64))
+    qs, flts = _queries(ds, n=3, seed=5)
+
+    async def main():
+        futs = [asyncio.ensure_future(fe.submit(qs[i], flts[i]))
+                for i in range(len(qs))]
+        await asyncio.sleep(0.05)               # inside the hold window
+        await fe.close(drain=False)
+        return await asyncio.gather(*futs, return_exceptions=True)
+
+    outs = asyncio.run(main())
+    assert all(isinstance(o, asyncio.CancelledError) for o in outs)
+    assert eng._m_inflight.value() == 0
